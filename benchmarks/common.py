@@ -1,0 +1,215 @@
+"""Shared benchmark machinery: the paper's four baselines + AE-LLM.
+
+Objective vectors are [acc, lat_ms, mem_gb, energy_j] from the analytic
+accuracy-effects model + TPU cost model (DESIGN.md §3: NVML -> XLA/
+roofline substitution).  Absolute Lat/Mem/Energy are TPU-tier numbers,
+not the paper's GPU milliseconds — the reproduced claims are the
+*relative* Efficiency Scores and orderings.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import itertools
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import TIERS
+from repro.core.evaluator import Evaluator
+from repro.core.features import TASKS, TaskSpec
+from repro.core.pareto import efficiency_score
+from repro.core.space import (ATTENTION_KINDS, EfficiencyConfig, FT_METHODS,
+                              FT_RANKS, KV_STYLES, MOE_EXPERTS, MOE_TOPK,
+                              QUANT_METHODS, QUANTS, ArchChoice, FtChoice,
+                              InfChoice, enumerate_space, space_for_family)
+from repro.core.tuner import AutoTuner, recommend_efficient
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+LM_TASKS = ["mmlu", "hellaswag", "arc_easy", "gsm8k", "humaneval",
+            "alpacaeval", "longbench", "needle", "mtbench", "vicuna"]
+VLM_TASKS = ["vqav2", "coco_caption", "textvqa"]
+
+# Table-2 model roster (paper §4.1 scales; public-config stand-ins)
+SMALL = ["llama2-1b", "qwen2-1.5b", "stablelm-1.6b"]
+MEDIUM = ["llama2-7b", "mistral-7b", "llama3.2-vision-11b"]
+LARGE = ["llama2-70b", "mixtral-8x7b", "jamba-1.5-large-398b"]
+
+
+def tier_for(model: str) -> str:
+    if model in SMALL:
+        return "datacenter"
+    return "high_perf" if model in LARGE else "datacenter"
+
+
+def evaluator(model: str, task: str, *, seed: int = 0) -> Evaluator:
+    cfg = get_config(model)
+    base_acc = {"understanding": 62.0, "generation": 45.0,
+                "long_context": 50.0, "multi_turn": 60.0,
+                "vision": 70.0}[TASKS[task].domain]
+    # base accuracy grows with log-scale (bigger models start higher)
+    base_acc += 6.0 * np.log10(max(cfg.param_count() / 1e9, 0.3))
+    return Evaluator(cfg, TASKS[task], TIERS[tier_for(model)],
+                     base_acc=base_acc, seed=seed)
+
+
+def avg_objs(model: str, eff: EfficiencyConfig, tasks, *, seed=0) -> np.ndarray:
+    return np.mean([evaluator(model, t, seed=seed).evaluate(eff)
+                    for t in tasks], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The four baselines
+
+
+def default_config() -> EfficiencyConfig:
+    return EfficiencyConfig.default()
+
+
+def best_single_stage(model: str, tasks, *, seed=0) -> EfficiencyConfig:
+    """Optimize one stage at a time from Default; return the best result.
+    (Paper baseline: 'Best Single-Stage'.)"""
+    cfg = get_config(model)
+    mask = space_for_family(cfg.family)
+    d = default_config()
+    base = avg_objs(model, d, tasks, seed=seed)
+    cands: list[EfficiencyConfig] = []
+    # arch-only
+    attns = ATTENTION_KINDS if mask.attention_arms else ["gqa"]
+    for a, e in itertools.product(attns, MOE_EXPERTS):
+        for k in (MOE_TOPK if e else [1]):
+            cands.append(dc.replace(d, arch=ArchChoice(a, e, k)))
+    # ft-only
+    for m, r in itertools.product(FT_METHODS, FT_RANKS):
+        cands.append(dc.replace(d, ft=FtChoice(m, 0 if m == "full" else r, 2)))
+    # inf-only
+    kvs = KV_STYLES if mask.kv_arms else ["full"]
+    for q, qm, kv in itertools.product(QUANTS, QUANT_METHODS, kvs):
+        cands.append(dc.replace(d, inf=InfChoice(q, qm, kv)))
+    best, best_s = d, -1.0
+    for c in cands:
+        o = avg_objs(model, c, tasks, seed=seed)
+        if o[0] < base[0] - 1.2:
+            continue
+        s = efficiency_score(o, base)
+        if s > best_s:
+            best, best_s = c, s
+    return best
+
+
+def manual_selection(model: str, scenario: str = "balanced") -> EfficiencyConfig:
+    """Expert heuristics (paper §5.6 practical insights)."""
+    cfg = get_config(model)
+    mask = space_for_family(cfg.family)
+    big = cfg.param_count() > 20e9
+    attn = "gqa" if mask.attention_arms else "gqa"
+    if scenario == "memory":
+        return EfficiencyConfig(
+            ArchChoice("mqa" if mask.attention_arms else "gqa", 0, 1),
+            FtChoice("lora", 32, 2),
+            InfChoice("int4", "awq", "mqa" if mask.kv_arms else "full"))
+    if scenario == "latency":
+        return EfficiencyConfig(
+            ArchChoice(attn, 4, 2), FtChoice("lora", 32, 2),
+            InfChoice("int8", "smoothquant", "gqa" if mask.kv_arms else "full"))
+    if scenario == "accuracy":
+        return EfficiencyConfig(
+            ArchChoice("mla" if mask.attention_arms else "gqa", 0, 1),
+            FtChoice("rslora" if big else "lora", 64 if big else 32, 2),
+            InfChoice("bf16", "gptq", "full"))
+    # balanced: expert picks int8 + GQA + LoRA-32
+    return EfficiencyConfig(
+        ArchChoice(attn, 0, 1), FtChoice("lora", 32, 2),
+        InfChoice("int8", "awq", "gqa" if mask.kv_arms else "full"))
+
+
+def efficientllm_recommendation(model: str, *, seed=0) -> EfficiencyConfig:
+    """The EfficientLLM-benchmark baseline: a FIXED per-scale-class
+    recommendation derived from that paper's aggregate findings (int8 is
+    the safe quant sweet spot; GQA everywhere; LoRA rank grows with
+    scale, RSLoRA at 70B+).  Deliberately not model/task-specific —
+    closing that gap is AE-LLM's contribution."""
+    cfg = get_config(model)
+    mask = space_for_family(cfg.family)
+    kv = "gqa" if mask.kv_arms else "full"
+    n = cfg.param_count()
+    if n < 3e9:
+        ft = FtChoice("lora", 16, 2)
+    elif n < 20e9:
+        ft = FtChoice("lora", 32, 2)
+    else:
+        ft = FtChoice("rslora", 64, 2)
+    return EfficiencyConfig(
+        ArchChoice("gqa", 0, 1), ft, InfChoice("int8", "gptq", kv))
+
+
+def aellm_select(model: str, tasks, *, seed=0, budget="bench") -> EfficiencyConfig:
+    """Run Algorithm 1 per (model, task-set) and select per Table 2."""
+    ev = evaluator(model, tasks[0], seed=seed)
+    evs = [evaluator(model, t, seed=seed) for t in tasks]
+
+    class MultiTaskEval:
+        cfg = ev.cfg
+
+        def evaluate(self, eff):
+            return np.mean([e.evaluate(eff) for e in evs], axis=0)
+
+        def feasible(self, eff):
+            return ev.feasible(eff)
+
+    mt = MultiTaskEval()
+    small = budget == "bench"
+    tuner = AutoTuner(mt, mask=space_for_family(ev.cfg.family),
+                      n0=64 if small else 96, refine_iters=2,
+                      k_per_iter=8, pop_size=32 if small else 64,
+                      generations=12 if small else 25, seed=seed)
+    report = tuner.run()
+    base = mt.evaluate(default_config())
+    eff, _ = recommend_efficient(report.archive, base)
+    return eff
+
+
+def method_rows(model: str, tasks, *, seed=0) -> dict:
+    """All five methods evaluated on (model, tasks) -> row dicts."""
+    base = avg_objs(model, default_config(), tasks, seed=seed)
+    methods = {
+        "Default": default_config(),
+        "Best Single-Stage": best_single_stage(model, tasks, seed=seed),
+        "Manual Selection": manual_selection(model),
+        "EfficientLLM Rec.": efficientllm_recommendation(model, seed=seed),
+        "AdaptiveEfficientLLM": aellm_select(model, tasks, seed=seed),
+    }
+    rows = {}
+    for name, eff in methods.items():
+        o = avg_objs(model, eff, tasks, seed=seed)
+        rows[name] = {
+            "config": str(eff),
+            "acc": round(float(o[0]), 2),
+            "lat_ms": round(float(o[1]), 2),
+            "mem_gb": round(float(o[2]), 2),
+            "energy_j": round(float(o[3]), 4),
+            "eff_score": round(efficiency_score(o, base), 3),
+        }
+    return rows
+
+
+def dump(name: str, payload) -> pathlib.Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1))
+    return p
+
+
+def print_table(title: str, rows_by_model: dict):
+    print(f"\n== {title} ==")
+    hdr = f"{'model':22s} {'method':22s} {'acc':>6s} {'lat_ms':>9s} " \
+          f"{'mem_gb':>8s} {'energy':>8s} {'score':>6s}"
+    print(hdr)
+    for model, rows in rows_by_model.items():
+        for meth, r in rows.items():
+            print(f"{model:22s} {meth:22s} {r['acc']:6.1f} "
+                  f"{r['lat_ms']:9.1f} {r['mem_gb']:8.1f} "
+                  f"{r['energy_j']:8.3f} {r['eff_score']:6.2f}")

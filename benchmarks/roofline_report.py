@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+DRY = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+ARCH_ORDER = ["stablelm-1.6b", "deepseek-coder-33b", "llama3.2-1b",
+              "qwen2-1.5b", "rwkv6-1.6b", "llama4-scout-17b-a16e",
+              "granite-moe-3b-a800m", "whisper-base",
+              "llama-3.2-vision-11b", "jamba-1.5-large-398b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    cells = {}
+    for p in DRY.glob(f"*__{mesh}{'__' + tag if tag else ''}.json"):
+        d = json.loads(p.read_text())
+        if (d.get("tag") or "") != tag:
+            continue
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def fmt_t(t):
+    return f"{t*1e3:10.2f}" if t < 100 else f"{t:9.1f}s"
+
+
+def render(mesh: str, tag: str = "") -> str:
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import HW
+    from repro.launch.roofline import analytic_hbm_bytes
+    cells = load(mesh, tag)
+    lines = [
+        f"| arch | shape | t_comp (ms) | t_mem (ms) | t_mem_adj | "
+        f"t_coll (ms) | bottleneck | adj | useful | frac | frac_adj | "
+        f"live GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = cells.get((a, s))
+            if d is None:
+                continue
+            if d["status"] == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | — | *skipped:"
+                             f" full-attention @500k* | — | — | — | — | —"
+                             f" | — |")
+                continue
+            if d["status"] == "error":
+                lines.append(f"| {a} | {s} | — | — | — | — | ERROR "
+                             f"{d['error'][:40]} | — | — | — | — | — | — |")
+                continue
+            r = d["roofline"]
+            m = d.get("memory") or {}
+            live = (m.get("live_bytes") or 0) / 2**30
+            fits = "yes" if m.get("fits_hbm") else "**NO**"
+            cfg = get_config(a)
+            if d.get("overrides"):
+                cfg = cfg.with_(**d["overrides"])
+            n_chips = d.get("n_chips", 256)
+            t_adj = analytic_hbm_bytes(cfg, SHAPES[s], n_chips=n_chips) \
+                / HW["hbm_bw"]
+            terms = {"compute": r["t_compute"], "memory_adj": t_adj,
+                     "collective": r["t_collective"]}
+            b_adj = max(terms, key=terms.get)
+            t_dom = max(terms.values())
+            frac_adj = min(1.0, r["useful_ratio"] * r["t_compute"] / t_dom) \
+                if t_dom > 0 else 0.0
+            lines.append(
+                f"| {a} | {s} | {r['t_compute']*1e3:.2f} | "
+                f"{r['t_memory']*1e3:.2f} | {t_adj*1e3:.2f} | "
+                f"{r['t_collective']*1e3:.2f} | "
+                f"{d['bottleneck']} | {b_adj} | {r['useful_ratio']:.2f} | "
+                f"{d['roofline_fraction']:.3f} | {frac_adj:.3f} | "
+                f"{live:.1f} | {fits} |")
+    n_ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in cells.values() if d["status"] == "skipped")
+    lines.append("")
+    lines.append(f"*{n_ok} compiled cells, {n_skip} documented skips "
+                 f"(mesh {mesh}{', tag ' + tag if tag else ''}).*")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    print(render(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

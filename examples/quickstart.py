@@ -1,0 +1,62 @@
+"""Quickstart — AE-LLM in ~60 lines.
+
+1. Pick a deployment scenario (model, task, hardware tier).
+2. Run the AE-LLM search (Algorithm 1) to get the Pareto front.
+3. Apply the recommended EfficiencyConfig to the model and train a few
+   steps with it on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.apply import apply_efficiency_config, apply_to_params
+from repro.core.costmodel import TIERS
+from repro.core.evaluator import Evaluator
+from repro.core.features import TASKS
+from repro.core.pareto import efficiency_score
+from repro.core.space import EfficiencyConfig, space_for_family
+from repro.core.tuner import AutoTuner, recommend_efficient
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import LM
+from repro.train.loop import Trainer
+
+# --- 1. the deployment scenario -------------------------------------------
+model_cfg = get_config("llama2-7b")          # what we want to deploy
+task = TASKS["gsm8k"]                        # numeric generation task
+tier = TIERS["datacenter"]                   # v5e-8 host
+
+# --- 2. search -------------------------------------------------------------
+ev = Evaluator(model_cfg, task, tier, seed=0)
+tuner = AutoTuner(ev, mask=space_for_family(model_cfg.family),
+                  n0=64, refine_iters=1, k_per_iter=8,
+                  pop_size=32, generations=12, seed=0,
+                  log_fn=print)
+report = tuner.run()
+base = ev.evaluate(EfficiencyConfig.default())
+eff, obj = recommend_efficient(report.archive, base)
+print(f"\nPareto front: {len(report.archive.front())} configs "
+      f"({report.n_real_evals} real evaluations, "
+      f"surrogate R² {report.surrogate_r2})")
+print(f"Default   acc={base[0]:.1f} lat={base[1]:.1f}ms "
+      f"mem={base[2]:.1f}GB energy={base[3]:.2f}J")
+print(f"AE-LLM c* acc={obj[0]:.1f} lat={obj[1]:.1f}ms "
+      f"mem={obj[2]:.1f}GB energy={obj[3]:.2f}J "
+      f"-> efficiency score {efficiency_score(obj, base):.2f}×")
+print(f"selected config: {eff}")
+
+# --- 3. apply c* and train (CPU-sized proxy of the same family) ------------
+cfg = apply_efficiency_config(get_smoke_config("llama3.2-1b"), eff)
+lm = LM(cfg)
+pipe = SyntheticLMData(cfg.vocab_size, 64, 4, seed=0)
+trainer = Trainer(lm, pipe, lr=1e-3, log_every=10)
+params = trainer.init_or_resume(jax.random.PRNGKey(0))
+params = apply_to_params(params, eff, jax.random.PRNGKey(1))
+mask = None
+if eff.ft.method != "full":
+    from repro.peft.lora import trainable_mask
+    mask = trainable_mask(params, eff.ft.method)
+trainer.set_params(params, mask=mask)
+hist = trainer.run(30)
+print(f"\ntrained 30 steps with c*: loss {hist[0]['loss']:.3f} -> "
+      f"{hist[-1]['loss']:.3f}")

@@ -1,0 +1,47 @@
+"""Serving example — continuous batching with AE-LLM's inference arms.
+
+Compares the c_inf arms on the same model: bf16 vs int8 weights, full vs
+narrowed (gqa-style) KV cache, reporting tokens/s and KV bytes.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import LM
+from repro.quant.qops import memory_bytes, quantize_tree
+from repro.serve.engine import Engine
+
+
+def bench(cfg, params, label, *, n_req=6, max_new=16):
+    lm = LM(cfg)
+    eng = Engine(lm, params, n_slots=3, max_len=128, seed=0)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    ids = [eng.submit(rng.integers(0, cfg.vocab_size, (16,)).tolist(),
+                      max_new_tokens=max_new) for _ in range(n_req)]
+    done = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(done[i].out_tokens) for i in ids)
+    kv = lm.init_cache(1, 128)
+    kv_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(kv))
+    print(f"  {label:28s} {n_tok/dt:7.1f} tok/s   weights "
+          f"{memory_bytes(params)/2**20:6.1f} MiB   KV/seq "
+          f"{kv_bytes/2**10:7.1f} KiB")
+    return done
+
+
+base_cfg = get_smoke_config("qwen2-1.5b")
+lm = LM(base_cfg)
+params = lm.init(jax.random.PRNGKey(0))
+
+print("c_inf arms on qwen2-family (reduced config, CPU):")
+bench(base_cfg, params, "bf16 + full KV")
+bench(base_cfg.with_(kv_cache_style="gqa"), params, "bf16 + gqa-narrowed KV")
+q8 = quantize_tree(params, quant="int8")
+bench(base_cfg, q8, "int8 + full KV")
+bench(base_cfg.with_(kv_cache_style="mqa", kv_cache_dtype="int8"), q8,
+      "int8 + mqa KV (int8 cache)")

@@ -1,0 +1,39 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import collections, re
+import jax
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.launch.roofline import parse_collectives, _DEF_RE, shape_bytes, COLLECTIVE_OPS
+from repro.sharding.ctx import use_mesh
+
+mesh = make_production_mesh()
+shape = SHAPES["prefill_32k"]
+cfg = get_config("deepseek-coder-33b").with_(scan_unroll=True, num_layers=2,
+                                             attn_q_block=4096, attn_kv_block=4096)
+with use_mesh(mesh):
+    comp = build_cell(cfg, shape, mesh, fsdp=False).lower().compile()
+txt = comp.as_text()
+shapes = {}
+for line in txt.splitlines():
+    m = _DEF_RE.match(line)
+    if m:
+        shapes[m.group(1)] = m.group(2)
+rows = []
+for line in txt.splitlines():
+    m = _DEF_RE.match(line)
+    if not m: continue
+    name, res, op, operands = m.groups()
+    base = re.sub(r"(-start|-done)$", "", op)
+    if base not in COLLECTIVE_OPS or op.endswith("-done"): continue
+    b = shape_bytes(operands) or sum(shape_bytes(shapes.get(r, ""))
+                                     for r in re.findall(r"%([\w.\-]+)", operands))
+    rows.append((b, base, res[:60], line.strip()[:160]))
+rows.sort(reverse=True)
+tot = collections.Counter()
+for b, base, res, line in rows:
+    tot[base] += b
+print({k: f"{v/2**30:.1f}GiB" for k,v in tot.items()})
+for b, base, res, line in rows[:12]:
+    print(f"{b/2**30:8.2f}GiB {base:18s} {line}")

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Flops breakdown probe for granite train_4k (hillclimb cell A)."""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.sharding.ctx import use_mesh
+
+mesh = make_production_mesh()
+shape = SHAPES["train_4k"]
+base = get_config("granite-moe-3b-a800m").with_(
+    scan_unroll=True, moe_impl="gather", vocab_pad_multiple=256,
+    attn_q_block=1024, attn_kv_block=1024)
+
+variants = {
+    "full_1group": base.with_(num_layers=1),
+    "no_moe": base.with_(num_layers=1, moe=None),
+    "no_moe_no_remat": base.with_(num_layers=1, moe=None,
+                                  remat_policy="none"),
+    "full_no_remat": base.with_(num_layers=1, remat_policy="none"),
+    "cap1.0": dataclasses.replace(
+        base.with_(num_layers=1),
+        moe=dataclasses.replace(base.moe, capacity_factor=1.0)),
+    "einsum_moe": base.with_(num_layers=1, moe_impl="einsum"),
+    "zerolayer_ce_only": base.with_(num_layers=1, d_ff=64, moe=None,
+                                    attention=dataclasses.replace(
+                                        base.attention, num_heads=2,
+                                        num_kv_heads=2, head_dim=16)),
+}
+
+for name, cfg in variants.items():
+    with use_mesh(mesh):
+        c = build_cell(cfg, shape, mesh, fsdp=False)
+        comp = c.lower().compile()
+    ca = comp.cost_analysis()
+    print(f"{name:22s} flops/chip={ca['flops']:.3e} "
+          f"bytes/chip={ca['bytes accessed']:.3e}")

@@ -1,0 +1,27 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import jax
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.sharding.ctx import use_mesh
+
+mesh = make_production_mesh()
+shape = SHAPES["train_4k"]
+base = get_config("granite-moe-3b-a800m").with_(
+    scan_unroll=True, moe_impl="gather", vocab_pad_multiple=256,
+    num_layers=1)
+
+variants = {
+    "E40_top8": base,
+    "E32_top8": base.with_(moe=dataclasses.replace(base.moe, num_experts=32)),
+    "E48_top8": base.with_(moe=dataclasses.replace(base.moe, num_experts=48)),
+    "E40_group2048": base.with_(moe_group_size=2048),
+}
+for name, cfg in variants.items():
+    with use_mesh(mesh):
+        c = build_cell(cfg, shape, mesh, fsdp=False)
+        comp = c.lower().compile()
+    ca = comp.cost_analysis()
+    print(f"{name:16s} flops/chip={ca['flops']:.3e} bytes/chip={ca['bytes accessed']:.3e}")

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config``.
+
+The ten assigned architectures are selectable via ``--arch <id>``
+(launch/train.py, launch/serve.py, launch/dryrun.py); the paper's own
+evaluation models live in ``paper_models``.
+"""
+from __future__ import annotations
+
+from repro.configs import (deepseek_coder_33b, granite_moe_3b_a800m,
+                           jamba_1_5_large_398b, llama3_2_1b,
+                           llama3_2_vision_11b, llama4_scout_17b_a16e,
+                           qwen2_1_5b, rwkv6_1_6b, stablelm_1_6b,
+                           whisper_base)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.paper_models import PAPER_MODELS
+
+_ARCH_MODULES = {
+    m.ARCH_ID: m
+    for m in (stablelm_1_6b, deepseek_coder_33b, llama3_2_1b, qwen2_1_5b,
+              rwkv6_1_6b, llama4_scout_17b_a16e, granite_moe_3b_a800m,
+              whisper_base, llama3_2_vision_11b, jamba_1_5_large_398b)
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def _norm(arch_id: str) -> str:
+    return arch_id.replace("_", "-").lower()
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    a = _norm(arch_id)
+    if a in _ARCH_MODULES:
+        return _ARCH_MODULES[a].config()
+    if a in PAPER_MODELS:
+        return PAPER_MODELS[a]()
+    raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}"
+                   f" + paper models {sorted(PAPER_MODELS)}")
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    a = _norm(arch_id)
+    if a in _ARCH_MODULES:
+        return _ARCH_MODULES[a].smoke_config()
+    raise KeyError(arch_id)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ARCH_IDS", "SHAPES", "get_config", "get_smoke_config",
+           "get_shape"]

@@ -1,0 +1,103 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input.
+
+The dry-run lowers against these (weak-type-correct, shardable, no
+device allocation).  ``mode`` follows the assigned shape grid:
+
+  train    -> kwargs for ``train_step``  : batch {tokens, labels[, mask,
+              modality_input]}
+  prefill  -> kwargs for ``prefill_step``: tokens + empty cache
+              [+ modality_input]
+  decode   -> kwargs for ``serve_step``  : one token per sequence + a
+              cache holding ``seq_len`` past positions + per-seq pos
+
+Modality frontends are stubs: audio provides (B, 1500, d) frame
+embeddings, VLM provides (B, n_img, d) patch embeddings (assignment
+spec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import LM
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def modality_spec(cfg: ModelConfig, batch: int):
+    if cfg.family == "audio":
+        return _sds((batch, cfg.encoder.max_source_len, cfg.d_model), BF16)
+    if cfg.family == "vlm":
+        return _sds((batch, cfg.num_image_tokens, cfg.d_model), BF16)
+    return None
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree as ShapeDtypeStructs (eval_shape: no allocation)."""
+    lm = LM(cfg)
+    return jax.eval_shape(lambda: lm.init_cache(batch, max_len))
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), I32),
+        "labels": _sds((b, s), I32),
+        "mask": _sds((b, s), F32),
+    }
+    m = modality_spec(cfg, b)
+    if m is not None:
+        batch["modality_input"] = m
+    return {"batch": batch}
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((b, s), I32),
+        "cache": abstract_cache(cfg, b, s),
+    }
+    m = modality_spec(cfg, b)
+    if m is not None:
+        out["modality_input"] = m
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": _sds((b,), I32),
+        "cache": abstract_cache(cfg, b, s),
+        "pos": _sds((b,), I32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.mode == "train":
+        return train_specs(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_specs(cfg, shape)
+    if shape.mode == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape.mode)
+
+
+# ---------------------------------------------------------------------------
+# Applicability of (arch × shape) cells — DESIGN.md §long_500k policy
+
+
+SUBQUADRATIC = {"rwkv6-1.6b", "jamba-1.5-large-398b", "llama4-scout-17b-a16e"}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, ("skipped: pure full-attention arch; 500k dense "
+                       "prefill/decode is quadratic (DESIGN.md §long_500k)")
+    return True, ""

@@ -1,0 +1,34 @@
+"""stablelm-1.6b — [dense] 24L d_model=2048 32H (GQA kv=32) d_ff=5632
+vocab=100352.  [hf:stabilityai/stablelm-2-1_6b; unverified]
+
+kv=32 == num_heads, so the GQA config degenerates to MHA (the paper's
+c_inf KV arm can still *narrow* the stored cache at serving time).
+StableLM-2 uses LayerNorm (not RMSNorm) and partial-rotary attention;
+we keep full rotary as substrate (noted in DESIGN.md).
+"""
+from repro.configs.base import AttentionConfig, ModelConfig
+
+ARCH_ID = "stablelm-1.6b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        d_ff=5632,
+        vocab_size=100_352,
+        attention=AttentionConfig(
+            kind="gqa", num_heads=32, num_kv_heads=32, head_dim=64,
+            rope_theta=10_000.0),
+        norm="layernorm",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=512,
+        attention=AttentionConfig(kind="gqa", num_heads=4, num_kv_heads=4,
+                                  head_dim=16, rope_theta=10_000.0),
+        ce_chunk=64)

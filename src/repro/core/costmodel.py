@@ -1,0 +1,131 @@
+"""Analytic TPU cost model: Lat / Mem / Energy for a config (Def. 2).
+
+The paper measures these with NVML on GPUs; the TPU-native substitute
+(DESIGN.md §3) is a roofline model over the *applied* ModelConfig:
+
+  latency = T_prefill(512) + 128 · T_decode      (paper Appendix A.2
+            measurement protocol: 512-token prompt, 128 generated)
+  T_phase = max(FLOPs/peak, HBM_bytes/bw, collective_bytes/ici)
+  memory  = weights(quant-aware) + KV cache + activation high-water
+  energy  = Σ_phase T·(idle + (tdp−idle)·util)   per chip × chips
+
+Hardware tiers map the paper's RTX-4090 / A100 / 8×H200 to v5e-1 / v5e-8 /
+v5e-256.  The same code path also consumes *measured* FLOPs/bytes from the
+dry-run's ``cost_analysis()`` when available (launch/roofline.py), which is
+how Algorithm 1's "evaluate on actual hardware" step stays real on this
+container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.core.apply import apply_efficiency_config
+from repro.core.space import EfficiencyConfig
+from repro.launch.mesh import HW
+
+
+@dataclass(frozen=True)
+class HwTier:
+    name: str
+    chips: int
+    mem_cap: float           # bytes per chip
+    power_budget: float      # watts total
+
+
+TIERS = {
+    "v5e-1": HwTier("v5e-1", 1, HW["hbm_bytes"], 300.0),
+    "v5e-8": HwTier("v5e-8", 8, HW["hbm_bytes"], 2200.0),
+    "v5e-256": HwTier("v5e-256", 256, HW["hbm_bytes"], 62000.0),
+}
+# The paper's hardware tiers mapped to TPU (DESIGN.md §3): consumer
+# RTX-4090 -> one v5e chip; data-center A100-80GB -> v5e-8 host;
+# high-performance 8×H200 -> a v5e-256 pod slice.
+TIERS["consumer"] = TIERS["v5e-1"]
+TIERS["datacenter"] = TIERS["v5e-8"]
+TIERS["high_perf"] = TIERS["v5e-256"]
+
+BYTES = {"bf16": 2.0, "fp8": 1.0, "int8": 1.0, "int4": 0.5}
+
+
+def _weight_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * BYTES.get(cfg.quant, 2.0)
+
+
+def _active_weight_bytes(cfg: ModelConfig) -> float:
+    return cfg.active_param_count() * BYTES.get(cfg.quant, 2.0)
+
+
+def _kv_bytes_per_token(cfg: ModelConfig) -> float:
+    a = cfg.attention
+    if a is None or "attn" not in cfg.block_pattern:
+        return 0.0
+    n_attn = sum(1 for b in cfg.block_pattern if b == "attn") \
+        * cfg.num_groups
+    elem = 1.0 if cfg.kv_cache_dtype == "int8" else 2.0
+    if a.kind == "mla":
+        return n_attn * (a.kv_lora_rank + a.rope_head_dim) * elem
+    from repro.models.attention import cache_kv_heads
+    kvh = cache_kv_heads(a, cfg.kv_cache_style)
+    return n_attn * 2 * kvh * a.head_dim * elem
+
+
+def _flops_per_token(cfg: ModelConfig, ctx_len: int) -> float:
+    """Forward FLOPs/token: 2·N_active + attention term 2·2·L_attn·d_kv·ctx."""
+    n_act = cfg.active_param_count()
+    a = cfg.attention
+    attn_fl = 0.0
+    if a is not None and "attn" in cfg.block_pattern:
+        n_attn = sum(1 for b in cfg.block_pattern if b == "attn") \
+            * cfg.num_groups
+        span = min(ctx_len, a.window) if a.window else ctx_len
+        attn_fl = 4.0 * n_attn * a.num_heads * a.head_dim * span
+    return 2.0 * n_act + attn_fl
+
+
+def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
+            prompt: int = 512, gen: int = 128, batch: int = 1) -> Dict[str, float]:
+    cfg = apply_efficiency_config(cfg_base, eff)
+    chips = tier.chips
+    peak = HW["peak_flops_bf16"] * (2.0 if cfg.quant == "int8" else 1.0)
+    bw = HW["hbm_bw"]
+
+    wbytes = _weight_bytes(cfg)
+    awbytes = _active_weight_bytes(cfg)
+    kv_tok = _kv_bytes_per_token(cfg)
+
+    # ---- prefill: compute-bound region ------------------------------------
+    fl_prefill = batch * prompt * _flops_per_token(cfg, prompt // 2)
+    by_prefill = awbytes + batch * prompt * kv_tok
+    t_prefill = max(fl_prefill / (chips * peak), by_prefill / (chips * bw))
+
+    # ---- decode: memory-bound region (reads active weights + KV/step) ----
+    fl_dec = batch * _flops_per_token(cfg, prompt + gen // 2)
+    by_dec = awbytes + batch * (prompt + gen // 2) * kv_tok
+    t_dec = max(fl_dec / (chips * peak), by_dec / (chips * bw))
+    # TP all-reduce per layer in decode (2 per block, d_model activations)
+    if chips > 1:
+        coll = 2 * cfg.num_layers * batch * cfg.d_model * 2.0 * 2.0
+        t_dec += coll / (chips * HW["ici_bw_per_link"] * HW["ici_links"])
+    latency = (t_prefill + gen * t_dec) * 1e3                    # ms
+
+    # ---- memory high-water -------------------------------------------------
+    act = batch * prompt * cfg.d_model * 2.0 * 4.0               # transient
+    mem = (wbytes + batch * (prompt + gen) * kv_tok + act)       # bytes
+    mem_gb = mem / 2**30
+
+    # ---- energy -------------------------------------------------------------
+    util_pf = min(1.0, fl_prefill / (chips * peak) / max(t_prefill, 1e-12))
+    util_dec = min(1.0, fl_dec / (chips * peak) / max(t_dec, 1e-12))
+    p_pf = HW["idle_watts"] + (HW["tdp_watts"] - HW["idle_watts"]) * util_pf
+    p_dec = HW["idle_watts"] + (HW["tdp_watts"] - HW["idle_watts"]) * util_dec
+    energy = chips * (t_prefill * p_pf + gen * t_dec * p_dec)    # joules
+
+    power = chips * max(p_pf, p_dec)
+    feasible = (mem / chips <= tier.mem_cap) and (power <= tier.power_budget)
+    return {"latency_ms": latency, "memory_gb": mem_gb,
+            "energy_j": energy, "power_w": power,
+            "feasible": feasible,
+            "flops_prefill": fl_prefill, "bytes_decode": by_dec}

@@ -1,0 +1,126 @@
+"""Pallas TPU FlashAttention-2 (forward), GQA-aware, causal + sliding window.
+
+Grid = (B, H, num_q_blocks, num_kv_blocks) with the kv-block axis minor-most:
+TPU executes it sequentially per q block, so the online-softmax running
+state (m, l, acc) lives in VMEM scratch across kv steps.  GQA is handled in
+the BlockSpec index maps — kv blocks are indexed by ``h // group`` — so
+repeated KV heads are never materialized.
+
+Block sizes default to 128×128 (MXU-aligned); fp32 accumulation.
+Causality and windowing are enforced per 2D tile via broadcasted iotas, and
+fully-masked tiles are skipped with ``pl.when`` (they still occupy grid
+steps; XLA's cost model sees the skip — on hardware this is the FA2
+"skip out-of-band blocks" optimization).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, nk: int,
+                  causal: bool, window: Optional[int], seq_q: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # A kv block is live unless it is entirely in the future (causal) or
+    # entirely beyond the window to the past.
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 > q_start - window)
+
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < jnp.int32(2**30)                       # all-true
+        if causal:
+            mask = kpos <= qpos
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if isinstance(live, bool):      # statically live (full attention)
+        _body()
+    else:
+        pl.when(live)(_body)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,D); k,v: (B,T,KH,D) -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    nq, nk = s // bq, t // bk
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, h, nq, nk)
+    q_spec = pl.BlockSpec((1, bq, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, d),
+                           lambda bi, hi, qi, ki: (bi, ki, hi // g, 0))
+    o_spec = pl.BlockSpec((1, bq, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=bq,
+                          block_k=bk, nk=nk, causal=causal, window=window,
+                          seq_q=s),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Public ops: quantized matmuls with kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.ref import (
+    int4_matmul_ref, int8_matmul_ref, quantize_rowwise)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def int8_matmul(xq, wq, x_scale, w_scale, *, out_dtype=jnp.bfloat16,
+                use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.int8_matmul.int8_matmul import int8_matmul_pallas
+        m, k = xq.shape
+        n = wq.shape[1]
+        bm = 256 if m % 256 == 0 else m
+        bn = 256 if n % 256 == 0 else n
+        bk = 512 if k % 512 == 0 else k
+        return int8_matmul_pallas(xq, wq, x_scale, w_scale, block_m=bm,
+                                  block_n=bn, block_k=bk, out_dtype=out_dtype,
+                                  interpret=not _on_tpu())
+    return int8_matmul_ref(xq, wq, x_scale, w_scale, out_dtype=out_dtype)
+
+
+def int8_matmul_dynamic(x, wq, w_scale, *, use_kernel: bool = False):
+    """Quantize activations on the fly (W8A8 serving path)."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    xq, xs = quantize_rowwise(x2)
+    y = int8_matmul(xq, wq, xs, w_scale, out_dtype=x.dtype,
+                    use_kernel=use_kernel)
+    return y.reshape(*shp[:-1], wq.shape[1])
+
+
+def int4_matmul(x, packed, w_scale) -> jax.Array:
+    """Weight-only int4 (W4A16); XLA fuses the unpack+dequant into the gemm."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    y = int4_matmul_ref(x2, packed, w_scale)
+    return y.reshape(*shp[:-1], packed.shape[1])

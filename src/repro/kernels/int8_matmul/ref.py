@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for quantized matmuls.
+
+W8A8: per-row activation scales × per-column weight scales, int32 accumulate.
+W4A16: int4 weights (packed two-per-int8 along K) dequantized against bf16
+activations (weight-only quant — the GPTQ/AWQ deployment style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_rowwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization of (..., K)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def quantize_colwise(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization of (K, N)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[0]
+
+
+def int8_matmul_ref(xq: jax.Array, wq: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """xq: (M,K) int8; wq: (K,N) int8; x_scale: (M,); w_scale: (N,)."""
+    acc = jax.lax.dot(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * x_scale[:, None] * w_scale[None, :]).astype(out_dtype)
+
+
+def pack_int4(w4: jax.Array) -> jax.Array:
+    """(K, N) int4 values in [-8,7] -> (K//2, N) packed **uint8**
+    (lo | hi<<4).  uint8 (vs int8) marks the leaf as int4-packed so the
+    quantized-matmul dispatch stays static under tracing."""
+    lo = w4[0::2].astype(jnp.uint8) & 0xF
+    hi = w4[1::2].astype(jnp.uint8) & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2, n = packed.shape
+    out = jnp.zeros((k2 * 2, n), jnp.int8)
+    out = out.at[0::2].set(lo)
+    out = out.at[1::2].set(hi)
+    return out
+
+
+def quantize_int4_colwise(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -8, 7).astype(jnp.int8)
+    return pack_int4(q), scale[0]
+
+
+def int4_matmul_ref(x: jax.Array, packed: jax.Array,
+                    w_scale: jax.Array) -> jax.Array:
+    """Weight-only: x (M,K) bf16 × int4-packed (K//2,N) -> (M,N) x.dtype."""
+    w = unpack_int4(packed).astype(jnp.float32) * w_scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,23 @@
+"""Public op: fused RMSNorm with kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5,
+            use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+        rows = 1
+        for s in x.shape[:-1]:
+            rows *= s
+        br = 256 if rows % 256 == 0 else rows
+        return rmsnorm_pallas(x, scale, eps=eps, block_rows=br,
+                              interpret=not _on_tpu())
+    return rmsnorm_ref(x, scale, eps)

@@ -1,0 +1,42 @@
+"""Pallas TPU fused RMSNorm.
+
+Rows are tiled (block_rows × d) with the full feature dim resident in VMEM
+(d ≤ 8192 bf16 = 16 KiB/row — trivially fits); mean-of-squares and rsqrt in
+fp32, single HBM round-trip per row (vs 3 for the unfused norm).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)[None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+                   block_rows: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    shp = x.shape
+    d = shp[-1]
+    x2 = x.reshape(-1, d)
+    m = x2.shape[0]
+    br = min(block_rows, m)
+    assert m % br == 0
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(shp)

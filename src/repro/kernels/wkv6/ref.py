@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the RWKV-6 WKV recurrence.
+
+Recurrence per head (D = head dim), all fp32:
+    o_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(logw_t) ∈ (0,1)
+
+``wkv6_scan_ref``    — step-by-step lax.scan (the ground-truth oracle).
+``wkv6_chunked_ref`` — chunked linear-attention form (the algorithm the
+Pallas kernel implements); numerically stable because every exponent is a
+*difference* of cumulative log-decays (≤ 0).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r, k, v, logw, u, s0) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,logw: (B,S,H,D) fp32; u: (H,D); s0: (B,H,D,D) -> (o, s_final)."""
+    def step(s, args):
+        r_t, k_t, v_t, lw_t = args                      # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,D,D)
+        o_t = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lw_t)[..., None] * s + kv
+        return s_new, o_t
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, logw))   # (S,B,H,D)
+    s_final, o = jax.lax.scan(step, s0, xs)
+    return o.swapaxes(0, 1), s_final
+
+
+def wkv6_chunked_ref(r, k, v, logw, u, s0, *,
+                     chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    nc = s // c
+
+    # checkpointed: backward otherwise saves the (B,C,C,H,D) decay
+    # tensor for every chunk; remat keeps only the (B,H,D,D) state.
+    @jax.checkpoint
+    def chunk_step(state, args):
+        r_c, k_c, v_c, lw_c = args                      # (B,C,H,D)
+        cw = jnp.cumsum(lw_c, axis=1)                   # inclusive
+        cwe = cw - lw_c                                 # exclusive
+        # pairwise decay exponent (t, q): cwe_t - cw_q  (≤ 0 for q < t)
+        diff = cwe[:, :, None] - cw[:, None, :]         # (B,C,C,H,D)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)    # strict lower: q < t
+        decay = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bthd,bqhd,btqhd->bhtq", r_c, k_c, decay)
+        diag = jnp.einsum("bthd,bthd,hd->bht", r_c, k_c,
+                          u)                            # bonus term (q = t)
+        scores = scores + diag[:, :, :, None] * jnp.eye(c)[None, None]
+        o_intra = jnp.einsum("bhtq,bqhd->bthd", scores, v_c)
+        o_state = jnp.einsum("bthd,bhde->bthe", r_c * jnp.exp(cwe), state)
+        # state update: exponent cw_end - cw_q ≤ 0
+        w_end = cw[:, -1]                               # (B,H,D)
+        kdec = k_c * jnp.exp(w_end[:, None] - cw)       # (B,C,H,D)
+        s_new = (jnp.exp(w_end)[..., None] * state
+                 + jnp.einsum("bqhd,bqhe->bhde", kdec, v_c))
+        return s_new, o_intra + o_state
+
+    xs = tuple(x.reshape(b, nc, c, h, d).swapaxes(0, 1)
+               for x in (r, k, v, logw))
+    s_final, o = jax.lax.scan(chunk_step, s0, xs)
+    o = o.swapaxes(0, 1).reshape(b, s, h, d)
+    return o, s_final

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the chunked RWKV-6 WKV recurrence.
+
+Grid = (B, H, num_chunks); the chunk axis is minor-most, so TPU iterates it
+sequentially per (b, h) and the running state lives in a VMEM scratch
+accumulator across chunk steps (same pattern as the TPU flash-attention
+kernel's running softmax).  Each step does the chunked linear-attention
+math on a (C, D) tile — C=64 tokens × D=64 head dim keeps the (C,C,D)
+pairwise-decay tensor at 1 MiB fp32, comfortably inside VMEM, and the
+(C,C)@(C,D) matmuls land on the MXU.
+
+All math fp32 (the recurrence is exp/cumsum-heavy; bf16 inputs are upcast
+on load).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 o_ref, sout_ref, state, *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)          # (C,D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)                # (D,)
+    s = state[...]                                     # (D,D)
+
+    c = chunk
+    cw = jnp.cumsum(lw, axis=0)                        # (C,D) inclusive
+    cwe = cw - lw                                      # exclusive
+    diff = cwe[:, None, :] - cw[None, :, :]            # (C,C,D) t,q
+    ids = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jds = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    tri = (jds < ids)[:, :, None]                      # strict lower
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    # scores[t,q] = Σ_d r[t,d] k[q,d] decay[t,q,d]
+    scores = jnp.einsum("td,qd,tqd->tq", r, k, decay,
+                        preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * k * u[None, :], axis=-1)        # (C,)
+    scores = scores + jnp.where(ids == jds, diag[:, None], 0.0)
+    o = scores @ v                                     # (C,D) intra
+    o = o + (r * jnp.exp(cwe)) @ s                     # carry-in state
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    w_end = cw[-1]                                     # (D,)
+    kdec = k * jnp.exp(w_end[None, :] - cw)            # (C,D)
+    state[...] = jnp.exp(w_end)[:, None] * s + kdec.T @ v
+
+    @pl.when(ci == nc - 1)
+    def _flush():
+        sout_ref[0, 0] = state[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, logw, u, s0, *, chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,logw: (B,S,H,D); u: (H,D); s0: (B,H,D,D) -> (o, s_final)."""
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+
+    grid = (b, h, nc)
+    tok_spec = pl.BlockSpec((1, c, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0))
+    u_spec = pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0))
+    s_spec = pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0))
+
+    o, s_final = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=c, nc=nc),
+        grid=grid,
+        in_specs=[tok_spec, tok_spec, tok_spec, tok_spec, u_spec, s_spec],
+        out_specs=[tok_spec, s_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+      logw.astype(jnp.float32), u.astype(jnp.float32),
+      s0.astype(jnp.float32))
+    return o, s_final

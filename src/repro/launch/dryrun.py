@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the
+# device count at first init, and the production dry-run needs 512
+# placeholder host devices to build the 16×16 (single-pod) and 2×16×16
+# (multi-pod) meshes.  Do not set this globally — smoke tests and
+# benchmarks want the real single CPU device.
+
+"""Multi-pod AOT dry-run.
+
+For every (architecture × input shape × mesh) cell:
+    lower -> compile -> memory_analysis + cost_analysis + collective
+    bytes -> roofline terms -> JSON artifact under experiments/dryrun/.
+
+This is the proof that the distribution config is coherent without real
+hardware, and the source of every number in EXPERIMENTS.md §Dry-run /
+§Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--set remat_policy=dots] [--tag x]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.specs import cell_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (extrapolate_terms, model_flops_for,
+                                   roofline_from_compiled)
+from repro.launch.steps import auto_fsdp, build_cell
+from repro.sharding.ctx import use_mesh
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for conv in (int, float):
+        try:
+            return k, conv(v)
+        except ValueError:
+            pass
+    if v in ("True", "False", "true", "false"):
+        return k, v.lower() == "true"
+    return k, v
+
+
+def _apply_overrides(cfg, overrides: dict):
+    """Supports dotted sub-config keys, e.g.
+    --set attention.head_pad_multiple=16 or --set moe.pad_experts=48."""
+    import dataclasses as _dc
+    flat = {k: v for k, v in overrides.items() if "." not in k}
+    nested: dict = {}
+    for k, v in overrides.items():
+        if "." in k:
+            top, sub = k.split(".", 1)
+            nested.setdefault(top, {})[sub] = v
+    for top, subs in nested.items():
+        cur = getattr(cfg, top)
+        flat[top] = _dc.replace(cur, **subs)
+    return cfg.with_(**flat)
+
+
+def _compile_variant(cfg, shape, mesh, fsdp, microbatches=1):
+    """Lower + compile one cfg variant; returns (compiled, seconds)."""
+    t0 = time.time()
+    with use_mesh(mesh):
+        cell = build_cell(cfg, shape, mesh, fsdp=fsdp,
+                          microbatches=microbatches)
+        compiled = cell.lower().compile()
+    return compiled, time.time() - t0
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides: dict, fsdp: str, tag: str, out_dir: pathlib.Path,
+             microbatches: int = 1, quiet: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{cell_id}.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    # keep the chunked-attention block grid small at long seq (block
+    # size doesn't change FLOPs; it bounds compile size + transients)
+    blk = max(1024, shape.seq_len // 8) if shape.mode != "decode" else 1024
+    cfg = cfg.with_(attn_q_block=blk, attn_kv_block=blk)
+    if overrides:
+        cfg = _apply_overrides(cfg, overrides)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "overrides": overrides,
+        "params_b": cfg.param_count() / 1e9,
+        "active_params_b": cfg.active_param_count() / 1e9,
+    }
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        result["status"] = "skipped"
+        result["why"] = why
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(result, indent=1))
+        if not quiet:
+            print(f"[dryrun] {cell_id}: SKIP ({why})")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    use_fsdp = {"on": True, "off": False}.get(fsdp) \
+        if fsdp in ("on", "off") else auto_fsdp(cfg, mesh, shape.mode)
+    result["microbatches"] = microbatches
+    try:
+        # --- 1) production graph (rolled scan): memory + feasibility ----
+        prod, t_prod = _compile_variant(cfg, shape, mesh, use_fsdp,
+                                        microbatches)
+        mem_terms = roofline_from_compiled(
+            prod, n_chips=mesh.size, model_flops=1.0)
+        # --- 2) accounting: XLA counts a while body once, so derive
+        # exact per-layer costs from 1-group and 2-group UNROLLED
+        # variants (all groups are structurally identical):
+        #     total = A + (num_groups - 1) · (B - A)
+        gl = cfg.blocks_per_group
+        cfg_a = cfg.with_(num_layers=1 * gl, scan_unroll=True)
+        cfg_b = cfg.with_(num_layers=2 * gl, scan_unroll=True)
+        comp_a, t_a = _compile_variant(cfg_a, shape, mesh, use_fsdp,
+                                       microbatches)
+        comp_b, t_b = _compile_variant(cfg_b, shape, mesh, use_fsdp,
+                                       microbatches)
+        ra = roofline_from_compiled(comp_a, n_chips=mesh.size, model_flops=1.0)
+        rb = roofline_from_compiled(comp_b, n_chips=mesh.size, model_flops=1.0)
+        g = cfg.num_groups
+        mf = model_flops_for(cfg, shape)
+        terms = extrapolate_terms(ra, rb, g, n_chips=mesh.size,
+                                  model_flops=mf)
+        result.update({
+            "status": "ok",
+            "fsdp": bool(use_fsdp),
+            "n_chips": int(mesh.size),
+            "compile_s": round(t_prod, 1),
+            "accounting_compile_s": round(t_a + t_b, 1),
+            "roofline": terms.to_dict(),
+            "bottleneck": terms.bottleneck,
+            "t_max_s": terms.t_max,
+            "roofline_fraction": terms.roofline_fraction,
+            "memory": mem_terms.memory_per_device,
+            "prod_collective_counts": mem_terms.collective_counts,
+        })
+        if not quiet:
+            m = terms
+            live = (result.get("memory") or {}).get("live_bytes", 0) / 2**30
+            print(f"[dryrun] {cell_id}: OK  comp={m.t_compute*1e3:.2f}ms "
+                  f"mem={m.t_memory*1e3:.2f}ms coll={m.t_collective*1e3:.2f}ms"
+                  f" -> {m.bottleneck} | useful={m.useful_ratio:.2f} "
+                  f"frac={m.roofline_fraction:.3f} live={live:.2f}GiB "
+                  f"(compile {t_prod:.0f}+{t_a + t_b:.0f}s)")
+    except Exception as e:  # noqa: BLE001 - record the failure mode
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if not quiet:
+            print(f"[dryrun] {cell_id}: ERROR {result['error'][:200]}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None,
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) on the chosen mesh(es)")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="ModelConfig override, e.g. --set remat_policy=dots")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args(argv)
+
+    overrides = dict(_parse_override(kv) for kv in args.overrides)
+    archs = list(ARCH_IDS) if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out_dir = pathlib.Path(args.out)
+    n_ok = n_skip = n_err = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi_pod=multi,
+                             overrides=overrides, fsdp=args.fsdp,
+                             tag=args.tag, out_dir=out_dir,
+                             microbatches=args.microbatches)
+                n_ok += r["status"] == "ok"
+                n_skip += r["status"] == "skipped"
+                n_err += r["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

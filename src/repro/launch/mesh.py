@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+*before* the first jax initialization.
+
+Target: TPU v5e.  One pod = 16×16 = 256 chips ("data" × "model");
+multi-pod = 2 × 256 = 512 chips with a leading "pod" axis (DCN between
+pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — used by roofline + cost model.
+HW = {
+    "name": "tpu_v5e",
+    "peak_flops_bf16": 197e12,        # FLOP/s
+    "peak_flops_int8": 394e12,
+    "hbm_bw": 819e9,                  # B/s
+    "hbm_bytes": 16 * 2**30,
+    "ici_bw_per_link": 50e9,          # B/s per link (~45 GB/s usable)
+    "ici_links": 4,                   # 2D torus: 4 links/chip
+    "dcn_bw": 25e9,                   # inter-pod, per host aggregate share
+    "tdp_watts": 220.0,               # chip TDP (energy model)
+    "idle_watts": 60.0,
+}

@@ -1,0 +1,274 @@
+"""Roofline term derivation from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs            / peak_FLOP/s        (per chip)
+    memory     = HLO_bytes            / HBM_bw             (per chip)
+    collective = collective_bytes     / ICI link bw        (per chip)
+
+``compiled.cost_analysis()`` reports the post-SPMD *per-device* module,
+so FLOPs/bytes are already per-chip — equivalent to the global-figure /
+chips form of the assignment.  Collective bytes are not in
+cost_analysis: we parse ``compiled.as_text()`` (post-SPMD HLO), build an
+instruction-name -> shape table, and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Operand shapes in that module are shard-sized, so
+the sum is per-chip bytes through the interconnect; global collective
+bytes = per-chip × chips, and the assignment's
+``collective_bytes / (chips × link_bw)`` reduces to
+``per_chip_bytes / link_bw``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)\)", re.S)
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> float:
+    """Bytes of one HLO shape string (handles tuples by summing)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand byte sizes of every collective in (post-SPMD) HLO."""
+    # 1st pass: instruction name -> result shape
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    bytes_by_op: Dict[str, float] = {}
+    count_by_op: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, _result, op, operands = m.groups()
+        base = re.sub(r"(-start|-done)$", "", op)
+        if base not in COLLECTIVE_OPS:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        b = 0.0
+        # operands may carry inline shapes; else resolve by name
+        inline = shape_bytes(operands)
+        if inline > 0:
+            b = inline
+        else:
+            for ref in re.findall(r"%([\w.\-]+)", operands):
+                if ref in shapes:
+                    b += shape_bytes(shapes[ref])
+        bytes_by_op[base] = bytes_by_op.get(base, 0.0) + b
+        count_by_op[base] = count_by_op.get(base, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                      # per-chip HLO flops
+    hbm_bytes: float                  # per-chip HLO bytes accessed
+    collective_bytes: float           # per-chip collective operand bytes
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float                # 6·N(_active)·D analytic
+    useful_ratio: float               # model_flops / (flops × chips)
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, int]
+    memory_per_device: Optional[dict] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+    @property
+    def t_max(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the binding roof the useful model FLOPs occupy =
+        (model-FLOPs time on the MXU) / (time the dominant term costs)."""
+        if self.t_max <= 0:
+            return 0.0
+        return min(1.0, (self.useful_ratio * self.t_compute) / self.t_max)
+
+
+def roofline_from_compiled(compiled, *, n_chips: int, model_flops: float,
+                           hw: dict = HW) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    hbm_bytes = float(ca.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = hbm_bytes / hw["hbm_bw"]
+    # per-chip bytes over the chip's ICI links (ring collectives use the
+    # torus links concurrently; one-link is the conservative floor)
+    t_collective = stats.total_bytes / hw["ici_bw_per_link"]
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    per_chip_useful = model_flops / n_chips
+    useful = per_chip_useful / flops if flops else 0.0
+    mem = None
+    try:
+        ms = compiled.memory_analysis()
+        if ms is not None:
+            mem = {
+                "argument_bytes": int(ms.argument_size_in_bytes),
+                "output_bytes": int(ms.output_size_in_bytes),
+                "temp_bytes": int(ms.temp_size_in_bytes),
+                "alias_bytes": int(ms.alias_size_in_bytes),
+            }
+            mem["live_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                                 + mem["temp_bytes"] - mem["alias_bytes"])
+            mem["fits_hbm"] = mem["live_bytes"] <= hw["hbm_bytes"]
+    except Exception:
+        pass
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm_bytes,
+        collective_bytes=stats.total_bytes,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, collectives=stats.bytes_by_op,
+        collective_counts=stats.count_by_op, memory_per_device=mem)
+
+
+def extrapolate_terms(ra: RooflineTerms, rb: RooflineTerms, num_groups: int,
+                      *, n_chips: int, model_flops: float,
+                      hw: dict = HW) -> RooflineTerms:
+    """Exact whole-model accounting from 1-group (A) and 2-group (B)
+    unrolled compiles: every group is structurally identical, so
+    ``total = A + (G-1)·(B-A)`` for flops / bytes / collective bytes."""
+    k = num_groups - 1
+
+    def ext(a, b):
+        return a + k * (b - a)
+
+    flops = ext(ra.flops, rb.flops)
+    hbm = ext(ra.hbm_bytes, rb.hbm_bytes)
+    coll = ext(ra.collective_bytes, rb.collective_bytes)
+    colls = {op: ext(ra.collectives.get(op, 0.0), rb.collectives.get(op, 0.0))
+             for op in set(ra.collectives) | set(rb.collectives)}
+    counts = {op: int(round(ext(ra.collective_counts.get(op, 0),
+                                rb.collective_counts.get(op, 0))))
+              for op in set(ra.collective_counts) | set(rb.collective_counts)}
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = hbm / hw["hbm_bw"]
+    t_collective = coll / hw["ici_bw_per_link"]
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops / n_chips) / flops if flops else 0.0
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, collectives=colls, collective_counts=counts)
+
+
+def analytic_hbm_bytes(cfg, shape, *, n_chips: int = 256,
+                       model_axis: int = 16) -> float:
+    """Per-chip HBM traffic under TPU-like fusion (the optimistic
+    roofline; the HLO bytes-accessed term from the unfused CPU backend
+    is the pessimistic one — both are reported, §Roofline caveat).
+
+    Counts: weight-shard reads (fwd/bwd), optimizer state r/w, layer
+    boundary + projection activations (fwd, bwd, one remat recompute),
+    CE logit chunks, KV-cache traffic.  Attention probabilities are NOT
+    counted — the flash kernel keeps them in VMEM.
+    """
+    dp = n_chips // model_axis
+    w_shard = cfg.param_count() * 2.0 / n_chips \
+        if cfg.param_count() * 2.0 / model_axis > 2 * 2**30 \
+        else cfg.param_count() * 2.0 / model_axis
+    v_shard = cfg.padded_vocab / model_axis \
+        if cfg.padded_vocab % model_axis == 0 else cfg.padded_vocab
+    if shape.mode == "train":
+        tokens_chip = shape.global_batch * shape.seq_len / dp
+        acts = cfg.num_layers * tokens_chip * cfg.d_model * 2.0 \
+            * 12 * 3 / model_axis if cfg.seq_parallel else \
+            cfg.num_layers * tokens_chip * cfg.d_model * 2.0 * 12 * 3
+        ce = tokens_chip * v_shard * 4.0 * 4
+        opt = w_shard * 10.0
+        return opt + 2 * w_shard + acts + ce
+    if shape.mode == "prefill":
+        tokens_chip = shape.global_batch * shape.seq_len / dp
+        acts = cfg.num_layers * tokens_chip * cfg.d_model * 2.0 * 8
+        kv = _kv_total_bytes(cfg, shape) / n_chips
+        return w_shard + acts + kv
+    # decode: weights + KV read per step
+    kv = _kv_total_bytes(cfg, shape) / n_chips
+    return w_shard + kv
+
+
+def _kv_total_bytes(cfg, shape) -> float:
+    a = cfg.attention
+    n_attn = sum(1 for b in cfg.block_pattern if b == "attn") \
+        * (cfg.num_layers // max(len(cfg.block_pattern), 1)) \
+        if a is not None else 0
+    if a is None or n_attn == 0:
+        return 1e6
+    kvh = a.kv_heads_effective()
+    return (shape.global_batch * shape.seq_len * kvh * a.head_dim
+            * 2 * 2.0 * n_attn)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for the
+    whole step (D = tokens processed; decode: D = batch, ×2 not ×6)."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence, forward only
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,152 @@
+"""Core layers: norms, embeddings, rotary, SwiGLU MLP, quant-aware linear.
+
+Parameters are plain nested dicts of jnp arrays (pytrees).  Each layer is a
+pair of functions ``init_*(key, ...) -> params`` and ``*_apply(params, x,
+...) -> y`` so the whole model stays a pure-JAX pytree program that pjit can
+shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.annotate import logical
+
+
+def dtype_of(name: str):
+    return {
+        "bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
+        "float32": jnp.float32, "fp32": jnp.float32,
+        "float16": jnp.float16,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Linear (quantization-aware)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16, axes=("in", "out")) -> dict:
+    scale = 1.0 / np.sqrt(d_in)
+    w = jax.random.uniform(key, (d_in, d_out), jnp.float32, -scale, scale)
+    p = {"w": logical(w.astype(dtype), axes)}
+    if bias:
+        p["b"] = logical(jnp.zeros((d_out,), dtype), (axes[1],))
+    return p
+
+
+def linear_apply(p: dict, x: jax.Array) -> jax.Array:
+    """Dense / quantized matmul.  Quantized params carry {'qw','scale'}."""
+    if "qw" in p:
+        from repro.quant.qops import quantized_matmul
+        y = quantized_matmul(x, p)
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    if "lora" in p:
+        from repro.peft.lora import lora_delta
+        y = y + lora_delta(p["lora"], x)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": logical(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm_apply(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": logical(jnp.ones((d,), dtype), ("embed",)),
+            "bias": logical(jnp.zeros((d,), dtype), ("embed",))}
+
+
+def layernorm_apply(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.bfloat16) -> dict:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def norm_apply(kind: str, p: dict, x: jax.Array, eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm_apply(p, x, eps)
+    return layernorm_apply(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"w": logical(w.astype(dtype), ("vocab", "embed"))}
+
+
+def embedding_apply(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed_apply(p: dict, x: jax.Array) -> jax.Array:
+    """LM head; fp32 logits for a stable softmax-xent."""
+    return (x.astype(jnp.float32) @ p["w"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, bias: bool = False,
+             dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, bias=bias, dtype=dtype,
+                            axes=("embed", "mlp")),
+        "up": init_linear(k2, d_model, d_ff, bias=bias, dtype=dtype,
+                          axes=("embed", "mlp")),
+        "down": init_linear(k3, d_ff, d_model, bias=bias, dtype=dtype,
+                            axes=("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = linear_apply(p["gate"], x)
+    u = linear_apply(p["up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return linear_apply(p["down"], h)

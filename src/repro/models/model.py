@@ -1,0 +1,192 @@
+"""Public model API: init / loss / forward / prefill / decode_step.
+
+Functional style: ``LM`` holds only the config; parameters are explicit
+pytrees so pjit/shard_map own placement.  The LM head uses a chunked
+cross-entropy (scan over sequence segments, rematerialized) so (B, S,
+vocab) logits are never fully resident — at 100k vocab that is the
+difference between 26 GB and <300 MB per device.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (dtype_of, embedding_apply, init_embedding,
+                                 init_norm, norm_apply)
+from repro.models.transformer import (encoder_forward, init_encoder,
+                                      init_stack, init_stack_cache,
+                                      stack_forward)
+from repro.sharding.ctx import maybe_constrain
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        params: Dict[str, Any] = {
+            "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    self.dtype),
+            "layers": init_stack(ks[1], cfg, self.dtype),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            from repro.models.layers import init_linear
+            params["lm_head"] = init_linear(ks[2], cfg.d_model,
+                                            cfg.padded_vocab,
+                                            dtype=self.dtype)
+        if cfg.encoder is not None:
+            params["encoder"] = init_encoder(ks[3], cfg, self.dtype)
+        return params
+
+    def abstract_params(self, key=None) -> dict:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    # ------------------------------------------------------------------
+    def _head_w(self, params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"]["w"].T
+        p = params["lm_head"]
+        if "qw" in p:  # quantized head: dequantize (serving path)
+            return (p["qw"].astype(jnp.float32)
+                    * p["scale"][None, :]).astype(self.dtype)
+        return p["w"]
+
+    def _mask_pad_logits(self, logits: jax.Array) -> jax.Array:
+        """-inf the padded vocab columns (vocab_pad_multiple)."""
+        v = self.cfg.vocab_size
+        if logits.shape[-1] == v:
+            return logits
+        ids = jnp.arange(logits.shape[-1])
+        return jnp.where(ids < v, logits, -1e30)
+
+    def _encode_source(self, params, modality_input):
+        """Stub frontends: modality_input is precomputed frame/patch
+        embeddings (B, T_src, d_model)."""
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return encoder_forward(params["encoder"], modality_input, cfg)
+        return modality_input  # VLM: patch embeddings consumed by xattn
+
+    def backbone(self, params, tokens, *, mode="train", cache=None, pos=None,
+                 modality_input=None, train=True):
+        cfg = self.cfg
+        x = embedding_apply(params["embed"], tokens).astype(self.dtype)
+        x = maybe_constrain(x, ("pod", "data"), None, None)
+        cross_src = None
+        if modality_input is not None and mode != "decode":
+            cross_src = self._encode_source(params, modality_input)
+        x, new_cache, aux = stack_forward(
+            params["layers"], x, cfg, mode=mode, cache=cache, pos=pos,
+            cross_src=cross_src, train=train)
+        x = norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch: dict) -> Tuple[jax.Array, dict]:
+        """batch: {tokens (B,S), labels (B,S), [mask (B,S)],
+        [modality_input]} -> (scalar loss, metrics)."""
+        cfg = self.cfg
+        x, _, aux = self.backbone(params, batch["tokens"], mode="train",
+                                  modality_input=batch.get("modality_input"),
+                                  train=True)
+        mask = batch.get("mask")
+        ce, acc = chunked_cross_entropy(x, self._head_w(params),
+                                        batch["labels"], mask=mask,
+                                        chunk=cfg.ce_chunk,
+                                        unroll=cfg.scan_unroll,
+                                        n_valid=cfg.vocab_size)
+        loss = ce
+        metrics = {"ce_loss": ce, "accuracy": acc}
+        for k, v in aux.items():
+            metrics[k] = v
+            if k.endswith("_loss"):
+                loss = loss + v
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def logits(self, params, tokens, *, modality_input=None) -> jax.Array:
+        x, _, _ = self.backbone(params, tokens, mode="train",
+                                modality_input=modality_input, train=False)
+        out = x.astype(jnp.float32) @ self._head_w(params).astype(jnp.float32)
+        return self._mask_pad_logits(out)
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return init_stack_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, tokens, cache, *, modality_input=None):
+        """Full-context pass filling the cache; returns last-token logits."""
+        x, cache, _ = self.backbone(params, tokens, mode="prefill",
+                                    cache=cache,
+                                    modality_input=modality_input,
+                                    train=False)
+        last = x[:, -1:]
+        logits = last.astype(jnp.float32) @ self._head_w(params).astype(
+            jnp.float32)
+        return self._mask_pad_logits(logits[:, 0]), cache
+
+    def decode_step(self, params, token, cache, pos):
+        """token: (B,) int32; pos: scalar position -> (logits (B,V), cache)."""
+        x, cache, _ = self.backbone(params, token[:, None], mode="decode",
+                                    cache=cache, pos=pos, train=False)
+        logits = x[:, 0].astype(jnp.float32) @ self._head_w(params).astype(
+            jnp.float32)
+        return self._mask_pad_logits(logits), cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+
+
+def chunked_cross_entropy(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                          *, mask: Optional[jax.Array] = None,
+                          chunk: int = 1024, unroll: bool = False,
+                          n_valid: Optional[int] = None,
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Mean next-token CE over (B,S,d) final states without materializing
+    full (B,S,V) logits: scans over S-chunks, rematerializing in backward."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        c = s  # fallback: single chunk
+    nc = s // c
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    v_total = head_w.shape[-1]
+
+    @jax.checkpoint
+    def chunk_loss(x_c, labels_c, mask_c):
+        logits = x_c.astype(jnp.float32) @ head_w.astype(jnp.float32)
+        logits = maybe_constrain(logits, ("pod", "data"), None, "model")
+        if n_valid is not None and n_valid < v_total:
+            logits = jnp.where(jnp.arange(v_total) < n_valid, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, labels_c[..., None],
+                                  axis=-1)[..., 0]
+        ce = (lse - lab) * mask_c
+        hit = (jnp.argmax(logits, -1) == labels_c).astype(jnp.float32) * mask_c
+        return jnp.sum(ce), jnp.sum(hit)
+
+    def body(carry, args):
+        tot, hits = carry
+        ce, hit = chunk_loss(*args)
+        return (tot + ce, hits + hit), None
+
+    xs = (x.reshape(b, nc, c, d).swapaxes(0, 1),
+          labels.reshape(b, nc, c).swapaxes(0, 1),
+          mask.reshape(b, nc, c).swapaxes(0, 1))
+    (tot, hits), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs,
+                                  unroll=nc if unroll else 1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return tot / denom, hits / denom

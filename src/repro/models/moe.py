@@ -1,0 +1,265 @@
+"""Mixture-of-Experts: GShard/Switch-style capacity-factor dispatch.
+
+Routing is a dense einsum dispatch (XLA-native, differentiable): tokens are
+split into groups, each group computes a one-hot ``(group, tokens, experts,
+capacity)`` dispatch mask, experts run batched over a leading E dim, and a
+combine einsum scatters results back.  Expert-parallelism falls out of
+sharding constraints: the dispatched tensor is constrained to
+``P("model", ...)`` on the expert dim when the model axis divides E, so
+GSPMD inserts the all-to-all pair (in/out) automatically; otherwise the
+per-expert hidden dim is tensor-parallel instead (granite: 40 experts on a
+16-way axis).
+
+Aux losses follow Switch Transformer: load-balance ``E·Σ f_e·p_e`` and
+router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import init_linear, init_mlp, linear_apply, mlp_apply
+from repro.sharding.annotate import logical
+from repro.sharding.ctx import maybe_constrain
+
+
+def init_moe(key, d_model: int, m: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d_model)
+    e, f = m.padded_experts, m.d_ff
+
+    def expert_stack(k, d_in, d_out):
+        w = jax.random.uniform(k, (e, d_in, d_out), jnp.float32,
+                               -1.0 / np.sqrt(d_in), 1.0 / np.sqrt(d_in))
+        return w.astype(dtype)
+
+    p = {
+        "router": {"w": logical(
+            (jax.random.uniform(ks[0], (d_model, e), jnp.float32,
+                                -scale, scale)).astype(jnp.float32),
+            ("embed", "experts"))},
+        "gate_e": logical(expert_stack(ks[1], d_model, f),
+                          ("experts", "embed", "mlp")),
+        "up_e": logical(expert_stack(ks[2], d_model, f),
+                        ("experts", "embed", "mlp")),
+        "down_e": logical(expert_stack(ks[3], f, d_model),
+                          ("experts", "mlp", "embed")),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d_model,
+                               m.num_shared_experts * m.shared_d_ff, dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig, train: bool) -> int:
+    cf = m.capacity_factor if train else m.eval_capacity_factor
+    cap = int(np.ceil(tokens_per_group * m.top_k * cf / m.num_experts))
+    return max(cap, m.top_k)
+
+
+def _mask_pad_experts(logits: jax.Array, m: MoEConfig) -> jax.Array:
+    """-inf the padded experts' router logits: never routed, exact."""
+    if m.padded_experts == m.num_experts:
+        return logits
+    ids = jnp.arange(m.padded_experts)
+    return jnp.where(ids < m.num_experts, logits, -1e30)
+
+
+def moe_apply(p: dict, x: jax.Array, m: MoEConfig, *, train: bool = True,
+              group_size: int = 512,
+              impl: str = "einsum") -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (out, aux) with aux = {load_balance_loss, z_loss, ...}.
+
+    ``impl``:
+      * "einsum" — GShard-style one-hot dispatch (paper-faithful; the
+        dispatch einsums cost O(tokens·E·cap·d) FLOPs).
+      * "gather" — sort/scatter dispatch (MegaBlocks-style, beyond-paper):
+        O(tokens·k·d) data movement, no dense dispatch compute.  Same
+        routing; capacity overflow drops by token order instead of
+        choice-round order.
+    """
+    if impl == "gather":
+        return moe_apply_gather(p, x, m, train=train, group_size=group_size)
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = min(group_size, n_tok)
+    # pad token count to a multiple of the group size
+    n_pad = (-n_tok) % gs
+    flat = x.reshape(n_tok, d)
+    if n_pad:
+        flat = jnp.concatenate([flat, jnp.zeros((n_pad, d), x.dtype)], 0)
+    g = flat.shape[0] // gs
+    xg = flat.reshape(g, gs, d)
+    xg = maybe_constrain(xg, ("pod", "data"), None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"]["w"])
+    logits = _mask_pad_experts(logits, m)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (g,s,E)
+
+    cap = _capacity(gs, m, train)
+    e = m.padded_experts
+
+    # --- top-k dispatch with per-expert capacity bookkeeping -------------
+    dispatch = jnp.zeros((g, gs, e, cap), jnp.bool_)
+    combine = jnp.zeros((g, gs, e, cap), jnp.float32)
+    gates_sum = jnp.zeros((g, gs), jnp.float32)
+    counts = jnp.zeros((g, e), jnp.int32)                       # slots used
+    masked = probs
+    fract_assigned = jnp.zeros((g, e), jnp.float32)
+    for _ in range(m.top_k):
+        idx = jnp.argmax(masked, axis=-1)                       # (g,s)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)      # (g,s,E)
+        gate = jnp.sum(probs * onehot, axis=-1)                 # (g,s)
+        # position of each token within its expert's buffer
+        pos_in_e = (jnp.cumsum(onehot, axis=1) - onehot)        # (g,s,E)
+        pos = jnp.sum(pos_in_e * onehot, axis=-1) + counts[
+            jnp.arange(g)[:, None], idx].astype(jnp.float32)    # (g,s)
+        fits = pos < cap
+        pos_c = jnp.clip(pos.astype(jnp.int32), 0, cap - 1)
+        d_k = (onehot[..., None] * jax.nn.one_hot(pos_c, cap)[:, :, None, :]
+               * fits[..., None, None])
+        dispatch = dispatch | d_k.astype(jnp.bool_)
+        combine = combine + d_k * gate[..., None, None]
+        gates_sum = gates_sum + gate * fits.astype(jnp.float32)
+        counts = counts + jnp.sum(
+            onehot * fits[..., None].astype(jnp.float32), axis=1).astype(jnp.int32)
+        fract_assigned = fract_assigned + jnp.mean(onehot, axis=1)
+        masked = masked * (1.0 - onehot)                        # next choice
+
+    # renormalize combine weights over the k selected experts
+    combine = combine / jnp.maximum(gates_sum, 1e-9)[..., None, None]
+    dispatch_f = dispatch.astype(x.dtype)
+    combine = combine.astype(jnp.float32)
+
+    # --- expert computation (rematerialized: the (E,g,cap,f) expert
+    # activations dominate backward residency otherwise) ------------------
+    @jax.checkpoint
+    def expert_ffn(dispatch_f, combine, xg):
+        xin = jnp.einsum("gsec,gsd->egcd", dispatch_f, xg)      # (E,g,cap,d)
+        xin = maybe_constrain(xin, "model", ("pod", "data"), None, None)
+        gate_h = jnp.einsum("egcd,edf->egcf", xin,
+                            p["gate_e"].astype(xin.dtype))
+        up_h = jnp.einsum("egcd,edf->egcf", xin, p["up_e"].astype(xin.dtype))
+        h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(xin.dtype) * up_h
+        h = maybe_constrain(h, "model", ("pod", "data"), None, None)
+        xout = jnp.einsum("egcf,efd->egcd", h, p["down_e"].astype(h.dtype))
+        xout = maybe_constrain(xout, "model", ("pod", "data"), None, None)
+        return jnp.einsum("gsec,egcd->gsd", combine.astype(xg.dtype), xout)
+
+    out = expert_ffn(dispatch_f, combine, xg)
+    out = out.reshape(-1, d)[:n_tok].reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+
+    # --- aux losses --------------------------------------------------------
+    # Switch load-balance: E * sum_e f_e * P_e   (f: fraction of tokens
+    # dispatched to e; P: mean router prob for e)
+    f_e = fract_assigned / m.top_k                               # (g,E)
+    p_e = jnp.mean(probs, axis=1)                                # (g,E)
+    lb_loss = m.num_experts * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(jnp.sum(dispatch_f, axis=(2, 3)) / m.top_k)
+    aux = {
+        "moe_lb_loss": lb_loss * m.aux_loss_weight,
+        "moe_z_loss": z_loss * m.z_loss_weight,
+        "moe_dropped_frac": dropped,
+    }
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Gather/sort dispatch (beyond-paper optimization; see moe_apply docstring)
+
+
+def moe_apply_gather(p: dict, x: jax.Array, m: MoEConfig, *,
+                     train: bool = True,
+                     group_size: int = 512) -> Tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = min(group_size, n_tok)
+    n_pad = (-n_tok) % gs
+    flat = x.reshape(n_tok, d)
+    if n_pad:
+        flat = jnp.concatenate([flat, jnp.zeros((n_pad, d), x.dtype)], 0)
+    g = flat.shape[0] // gs
+    xg = flat.reshape(g, gs, d)
+    xg = maybe_constrain(xg, ("pod", "data"), None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"])
+    logits = _mask_pad_experts(logits, m)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (g,s,E)
+    e = m.padded_experts
+    k = m.top_k
+    cap = _capacity(gs, m, train)
+
+    gate, idx = jax.lax.top_k(probs, k)                         # (g,s,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    def one_group(xg_i, idx_i, gate_i):
+        """xg_i: (gs,d)  idx_i/gate_i: (gs,k) -> (out (gs,d), stats)."""
+        eid = idx_i.reshape(gs * k)                             # slot -> e
+        # stable sort slots by expert; rank within expert = slot order
+        order = jnp.argsort(eid, stable=True)                   # (gs·k,)
+        eid_s = eid[order]
+        counts = jnp.zeros((e,), jnp.int32).at[eid].add(1)
+        starts = jnp.cumsum(counts) - counts                    # exclusive
+        pos_s = jnp.arange(gs * k, dtype=jnp.int32) - starts[eid_s]
+        keep_s = pos_s < cap
+        tok_s = order // k                                      # slot -> token
+        dest = jnp.where(keep_s, eid_s * cap + pos_s, e * cap)  # drop bin
+        # scatter tokens into the (E·cap, d) expert buffer
+        buf = jnp.zeros((e * cap + 1, d), xg_i.dtype)
+        buf = buf.at[dest].set(xg_i[tok_s])
+        xin = buf[:-1].reshape(e, cap, d)
+        return xin, (order, eid_s, pos_s, keep_s, tok_s, counts)
+
+    xin, (order, eid_s, pos_s, keep_s, tok_s, counts) = jax.vmap(one_group)(
+        xg, idx, gate)                                          # (g,E,cap,d)
+
+    xin = jnp.swapaxes(xin, 0, 1)                               # (E,g,cap,d)
+    xin = maybe_constrain(xin, "model", ("pod", "data"), None, None)
+
+    @jax.checkpoint
+    def expert_ffn(xin):
+        gate_h = jnp.einsum("egcd,edf->egcf", xin,
+                            p["gate_e"].astype(xin.dtype))
+        up_h = jnp.einsum("egcd,edf->egcf", xin, p["up_e"].astype(xin.dtype))
+        h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(xin.dtype) * up_h
+        h = maybe_constrain(h, "model", ("pod", "data"), None, None)
+        xout = jnp.einsum("egcf,efd->egcd", h, p["down_e"].astype(h.dtype))
+        return maybe_constrain(xout, "model", ("pod", "data"), None, None)
+
+    xout = jnp.swapaxes(expert_ffn(xin), 0, 1)                  # (g,E,cap,d)
+
+    def combine_group(xout_i, order_i, eid_i, pos_i, keep_i, tok_i, gate_i):
+        src = jnp.where(keep_i, eid_i * cap + jnp.minimum(pos_i, cap - 1), 0)
+        y_s = xout_i.reshape(e * cap, d)[src]                   # (gs·k, d)
+        w_s = gate_i.reshape(gs * k)[order_i] * keep_i          # slot gates
+        y_s = y_s * w_s[:, None].astype(y_s.dtype)
+        out = jnp.zeros((gs, d), y_s.dtype).at[tok_i].add(y_s)
+        return out
+
+    out = jax.vmap(combine_group)(xout, order, eid_s, pos_s, keep_s, tok_s,
+                                  gate)
+    out = out.reshape(-1, d)[:n_tok].reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+
+    # aux losses (identical formulas to the einsum path)
+    f_e = counts.astype(jnp.float32) / (gs * k)                  # (g,E)
+    p_e = jnp.mean(probs, axis=1)
+    lb_loss = m.num_experts * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep_s.astype(jnp.float32))
+    aux = {
+        "moe_lb_loss": lb_loss * m.aux_loss_weight,
+        "moe_z_loss": z_loss * m.z_loss_weight,
+        "moe_dropped_frac": dropped,
+    }
+    return out, aux

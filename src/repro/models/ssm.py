@@ -1,0 +1,268 @@
+"""Attention-free sequence mixers: RWKV-6 ("Finch") and Mamba (selective SSM).
+
+Both expose the same three entry points as attention:
+  * ``*_forward``  — full-sequence (train / prefill), returns (y, final_state)
+  * ``*_decode``   — one-token step on a constant-size recurrent state
+  * ``init_*_state``
+
+RWKV-6's WKV recurrence is the compute hot-spot; the chunked linear-attention
+form lives in ``repro.kernels.wkv6`` (Pallas kernel + pure-jnp oracle) and is
+called through ``repro.kernels.wkv6.ops``.
+
+Mamba uses a chunked associative scan over time (memory ∝ chunk, not seq).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import init_linear, linear_apply
+from repro.sharding.annotate import logical
+from repro.sharding.ctx import maybe_constrain
+
+# ===========================================================================
+# RWKV-6
+
+
+def init_rwkv6(key, d_model: int, s: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 12)
+    hd = s.head_dim
+    h = d_model // hd
+    lo = 32
+    u = jax.random.uniform(ks[0], (h, hd), jnp.float32, -1.0, 1.0)
+    return {
+        "tmix": {
+            "x_maa": jnp.zeros((d_model,), jnp.float32),
+            "maas": jnp.zeros((5, d_model), jnp.float32),  # w,k,v,r,g lerp
+            "tm_w1": (jax.random.normal(ks[1], (d_model, 5 * lo)) * 0.01
+                      ).astype(jnp.float32),
+            "tm_w2": (jax.random.normal(ks[2], (5, lo, d_model)) * 0.01
+                      ).astype(jnp.float32),
+        },
+        "wdecay": {
+            "w0": jnp.full((d_model,), -6.0, jnp.float32),
+            "w1": (jax.random.normal(ks[3], (d_model, 64)) * 0.01
+                   ).astype(jnp.float32),
+            "w2": (jax.random.normal(ks[4], (64, d_model)) * 0.01
+                   ).astype(jnp.float32),
+        },
+        "u": logical(u, ("heads", "head_dim")),
+        "wr": init_linear(ks[5], d_model, d_model, dtype=dtype),
+        "wk": init_linear(ks[6], d_model, d_model, dtype=dtype),
+        "wv": init_linear(ks[7], d_model, d_model, dtype=dtype),
+        "wg": init_linear(ks[8], d_model, d_model, dtype=dtype),
+        "wout": init_linear(ks[9], d_model, d_model, dtype=dtype),
+        "ln_x": {"scale": jnp.ones((d_model,), jnp.float32),
+                 "bias": jnp.zeros((d_model,), jnp.float32)},
+    }
+
+
+def init_rwkv6_state(batch: int, d_model: int, s: SSMConfig,
+                     dtype=jnp.float32) -> dict:
+    hd = s.head_dim
+    h = d_model // hd
+    return {"wkv": jnp.zeros((batch, h, hd, hd), dtype),
+            "x_prev": jnp.zeros((batch, d_model), dtype)}
+
+
+def _rwkv6_mix(p: dict, x: jax.Array, x_prev_tok: jax.Array):
+    """Token-shift + data-dependent lerp -> (r,k,v,g,w_logdecay)."""
+    tm = p["tmix"]
+    sx = x_prev_tok - x                                          # (B,S,d)
+    xf = x.astype(jnp.float32)
+    sxf = sx.astype(jnp.float32)
+    xxx = xf + sxf * tm["x_maa"]
+    # low-rank data-dependent lerp offsets for the 5 streams
+    lr = jnp.tanh(xxx @ tm["tm_w1"])                             # (B,S,5*lo)
+    lr = lr.reshape(*lr.shape[:-1], 5, -1)                       # (B,S,5,lo)
+    m = jnp.einsum("bsfl,fld->bsfd", lr, tm["tm_w2"])            # (B,S,5,d)
+    mixed = xf[..., None, :] + sxf[..., None, :] * (tm["maas"] + m)
+    xw, xk, xv, xr, xg = [mixed[..., i, :].astype(x.dtype) for i in range(5)]
+
+    wd = p["wdecay"]
+    logw = -jnp.exp(wd["w0"] + jnp.tanh(xw.astype(jnp.float32) @ wd["w1"])
+                    @ wd["w2"])                                  # (B,S,d) <=0
+    r = linear_apply(p["wr"], xr)
+    k = linear_apply(p["wk"], xk)
+    v = linear_apply(p["wv"], xv)
+    g = jax.nn.silu(linear_apply(p["wg"], xg).astype(jnp.float32))
+    return r, k, v, g, logw
+
+
+def _rwkv6_out(p: dict, o: jax.Array, g: jax.Array, h: int, hd: int):
+    b, s_, _, _ = o.shape
+    of = o.reshape(b, s_, h * hd).astype(jnp.float32)
+    # per-head group norm
+    og = of.reshape(b, s_, h, hd)
+    mu = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = (og - mu) * jax.lax.rsqrt(var + 64e-5)
+    of = og.reshape(b, s_, h * hd) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    y = (of * g).astype(jnp.bfloat16)
+    return linear_apply(p["wout"], y.astype(o.dtype) if o.dtype != jnp.float32
+                        else y)
+
+
+def rwkv6_forward(p: dict, x: jax.Array, s: SSMConfig, state: dict, *,
+                  use_kernel: bool = False) -> Tuple[jax.Array, dict]:
+    from repro.kernels.wkv6 import ops as wkv_ops
+    b, sl, d = x.shape
+    hd = s.head_dim
+    h = d // hd
+    x_prev_tok = jnp.concatenate(
+        [state["x_prev"].astype(x.dtype)[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rwkv6_mix(p, x, x_prev_tok)
+    rh = r.reshape(b, sl, h, hd)
+    kh = k.reshape(b, sl, h, hd)
+    vh = v.reshape(b, sl, h, hd)
+    wh = logw.reshape(b, sl, h, hd)
+    rh = maybe_constrain(rh, ("pod", "data"), None, "model", None)
+    o, wkv = wkv_ops.wkv6(rh, kh, vh, wh, p["u"],
+                          state["wkv"], use_kernel=use_kernel)
+    y = _rwkv6_out(p, o.astype(x.dtype), g, h, hd)
+    new_state = {"wkv": wkv, "x_prev": x[:, -1].astype(state["x_prev"].dtype)}
+    return y, new_state
+
+
+def rwkv6_decode(p: dict, x: jax.Array, s: SSMConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """x: (B,1,d) single token; state carries wkv + previous token."""
+    b, _, d = x.shape
+    hd = s.head_dim
+    h = d // hd
+    x_prev_tok = state["x_prev"].astype(x.dtype)[:, None]
+    r, k, v, g, logw = _rwkv6_mix(p, x, x_prev_tok)
+    rh = r.reshape(b, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, h, hd).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(b, h, hd))
+    u = p["u"]
+    wkv = state["wkv"]
+    # o = r·(S + u ⊙ k ⊗ v); S' = diag(w) S + k ⊗ v
+    kv = kh[..., :, None] * vh[..., None, :]                     # (B,H,hd,hd)
+    o = jnp.einsum("bhi,bhij->bhj", rh, wkv + u[None, :, :, None] * kv)
+    new_wkv = w[..., None] * wkv + kv
+    y = _rwkv6_out(p, o[:, None].reshape(b, 1, h, hd), g, h, hd)
+    return y, {"wkv": new_wkv, "x_prev": x[:, -1].astype(state["x_prev"].dtype)}
+
+
+# ===========================================================================
+# Mamba
+
+
+def init_mamba(key, d_model: int, s: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    di = s.expand * d_model
+    dtr = s.dt_rank or max(1, d_model // 16)
+    a_init = jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1,
+                                         dtype=jnp.float32)[None], (di, 1)))
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, s.d_conv)) * 0.02
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * s.d_state, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": logical(a_init, ("inner", "state")),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d_model, dtype=dtype),
+    }
+
+
+def init_mamba_state(batch: int, d_model: int, s: SSMConfig,
+                     dtype=jnp.float32) -> dict:
+    di = s.expand * d_model
+    return {"ssm": jnp.zeros((batch, di, s.d_state), dtype),
+            "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype)}
+
+
+def _mamba_ssm_params(p: dict, xc: jax.Array, s: SSMConfig):
+    dtr = p["dt_proj"]["w"].shape[0]
+    proj = linear_apply(p["x_proj"], xc)
+    dt, bmat, cmat = jnp.split(proj.astype(jnp.float32),
+                               [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_bias"])                          # (B,S,di)
+    a = -jnp.exp(p["A_log"])                                      # (di,N)
+    return dt, a, bmat, cmat
+
+
+def mamba_forward(p: dict, x: jax.Array, s: SSMConfig, state: dict, *,
+                  chunk: int = 128) -> Tuple[jax.Array, dict]:
+    b, sl, d = x.shape
+    di = s.expand * d
+    xz = linear_apply(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                             # (B,S,di)
+    xi = maybe_constrain(xi, ("pod", "data"), None, "model")
+
+    # causal depthwise conv with carried context
+    ctx = state["conv"].astype(xi.dtype)                          # (B,k-1,di)
+    xpad = jnp.concatenate([ctx, xi], axis=1)
+    new_conv = xpad[:, -(s.d_conv - 1):].astype(state["conv"].dtype) \
+        if s.d_conv > 1 else state["conv"]
+    xc = sum(xpad[:, i:i + sl] * p["conv_w"][:, i].astype(xi.dtype)
+             for i in range(s.d_conv))
+    xc = jax.nn.silu(xc.astype(jnp.float32) + p["conv_b"]).astype(xi.dtype)
+
+    dt, a, bmat, cmat = _mamba_ssm_params(p, xc, s)
+    # discretize: dA=(B,S,di,N) via chunked associative scan
+    xf = xc.astype(jnp.float32)
+    n_chunks = max(1, sl // chunk)
+    assert sl % n_chunks == 0
+
+    # checkpointed: scan backward otherwise saves every chunk's
+    # (B,C,di,N) intermediates — ~25 GB/layer at jamba scale.  With
+    # remat only the (B,di,N) carry is kept per chunk.
+    @jax.checkpoint
+    def chunk_step(h0, args):
+        dt_c, b_c, c_c, x_c = args                               # (B,C,...)
+        da = jnp.exp(dt_c[..., None] * a)                        # (B,C,di,N)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]       # (B,C,di,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        da_s, dbx_s = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h = da_s * h0[:, None] + dbx_s                            # (B,C,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, c_c)
+        return h[:, -1], y
+
+    args = [v.reshape(b, n_chunks, sl // n_chunks, *v.shape[2:]).swapaxes(0, 1)
+            for v in (dt, bmat, cmat, xf)]
+    h_last, ys = jax.lax.scan(chunk_step, state["ssm"].astype(jnp.float32),
+                              tuple(args))
+    y = ys.swapaxes(0, 1).reshape(b, sl, di)
+    y = y + p["D"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = linear_apply(p["out_proj"], y)
+    return out, {"ssm": h_last.astype(state["ssm"].dtype), "conv": new_conv}
+
+
+def mamba_decode(p: dict, x: jax.Array, s: SSMConfig,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    xz = linear_apply(p["in_proj"], x)                            # (B,1,2di)
+    xi, z = jnp.split(xz[:, 0], 2, axis=-1)                       # (B,di)
+
+    ctx = state["conv"].astype(xi.dtype)                          # (B,k-1,di)
+    window = jnp.concatenate([ctx, xi[:, None]], axis=1)          # (B,k,di)
+    xc = jnp.einsum("bkd,dk->bd", window, p["conv_w"].astype(xi.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32) + p["conv_b"]).astype(xi.dtype)
+    new_conv = window[:, 1:].astype(state["conv"].dtype)
+
+    dt, a, bmat, cmat = _mamba_ssm_params(p, xc[:, None], s)
+    dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    da = jnp.exp(dt[..., None] * a)                               # (B,di,N)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h = da * state["ssm"].astype(jnp.float32) + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat) + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = linear_apply(p["out_proj"], y[:, None])
+    return out, {"ssm": h.astype(state["ssm"].dtype), "conv": new_conv}

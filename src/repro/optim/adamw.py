@@ -1,0 +1,94 @@
+"""AdamW from scratch (fp32 state, trainable-mask aware) + schedules.
+
+Optimizer state is a pytree mirroring params, so pjit shards it with the
+same rules as the parameters (ZeRO-1 falls out of the sharded state +
+reduce-scattered grads; see DESIGN.md §9).  Masked leaves (frozen base
+weights under PEFT) carry zero-size placeholder state so the tree structure
+stays scannable.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def _is_float(leaf) -> bool:
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)
+
+
+def init_adamw(params, mask=None) -> AdamWState:
+    def zeros_like(p, m=True):
+        if m and _is_float(p):
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros((0,), jnp.float32)     # frozen / non-float leaf
+    if mask is None:
+        mu = jax.tree.map(zeros_like, params)
+        nu = jax.tree.map(zeros_like, params)
+    else:
+        mu = jax.tree.map(zeros_like, params, mask)
+        nu = jax.tree.map(zeros_like, params, mask)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, mask=None):
+    """Returns (new_params, new_state).  ``lr`` may be scalar or callable(step)."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, trainable=True):
+        if not trainable or not _is_float(p) or m.size == 0:
+            return p, m, v
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:        # decay matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+        return p2, m2, v2
+
+    if mask is None:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    else:
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu, mask)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    p2 = treedef.unflatten([t[0] for t in flat])
+    mu2 = treedef.unflatten([t[1] for t in flat])
+    nu2 = treedef.unflatten([t[2] for t in flat])
+    return p2, AdamWState(step=step, mu=mu2, nu=nu2)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads) if _is_float(g)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype)
+        if _is_float(g) else g, grads), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

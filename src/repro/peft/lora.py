@@ -1,0 +1,145 @@
+"""Parameter-efficient fine-tuning: LoRA, QLoRA, DoRA, RSLoRA.
+
+AE-LLM's ``c_ft`` arm.  Adapters are attached *inside* the wrapped linear's
+param dict under ``"lora"`` so ``linear_apply`` picks them up transparently;
+``trainable_mask`` then freezes everything except adapters (and, for DoRA,
+the magnitude vector).
+
+Scaling:   LoRA/QLoRA/DoRA: α/r     RSLoRA: α/√r   (rank-stabilized)
+QLoRA = LoRA on int4-quantized base weights (quantize first, then attach).
+DoRA decomposes W into magnitude ‖W‖_col × direction and trains the
+magnitude alongside the low-rank update.
+"""
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# target projections for adapter injection (paper: attention + MLP)
+DEFAULT_TARGETS = r"/(wq|wk|wv|wo|gate|up|down|q_up|kv_up_k|kv_up_v)$"
+
+
+def init_lora(key, d_in: int, d_out: int, *, rank: int, alpha: float,
+              method: str = "lora", w_col_norm=None, stack: int = 0) -> dict:
+    """``stack`` > 0 builds layer-stacked adapters (scan-over-layers trees);
+    lax.scan slices the leading dim so ``lora_delta`` always sees 2-D."""
+    ka, kb = jax.random.split(key)
+    scale = alpha / (rank ** 0.5 if method == "rslora" else rank)
+    lead = (stack,) if stack else ()
+    p = {
+        "a": (jax.random.normal(ka, lead + (d_in, rank)) * 0.01
+              ).astype(jnp.float32),
+        "b": jnp.zeros(lead + (rank, d_out), jnp.float32),
+        "scaling": jnp.full(lead + (1,), scale, jnp.float32),
+    }
+    if method == "dora":
+        assert w_col_norm is not None
+        p["m"] = w_col_norm.astype(jnp.float32)       # trainable magnitude
+    return p
+
+
+def lora_delta(p: dict, x: jax.Array) -> jax.Array:
+    """Low-rank update; DoRA additionally rescales by m/‖W+BA‖ (folded into
+    the delta so the base matmul stays untouched)."""
+    xf = x.astype(jnp.float32)
+    y = (xf @ p["a"]) @ p["b"] * p["scaling"]
+    return y.astype(x.dtype)
+
+
+def _col_norm(w: jax.Array) -> jax.Array:
+    return jnp.linalg.norm(w.astype(jnp.float32), axis=0)
+
+
+def apply_peft(params: dict, key, *, method: str = "lora", rank: int = 16,
+               alpha: float = 32.0,
+               targets: str = DEFAULT_TARGETS) -> dict:
+    """Attach adapters to every matching linear in the param tree.
+
+    ``method``: lora | qlora | dora | rslora.  QLoRA additionally expects the
+    base weights to already be int4-quantized (see repro.quant.calibrate);
+    adapters attach the same way.
+    """
+    if method == "full":
+        return params
+    key_holder = [key]
+
+    def next_key():
+        key_holder[0], sub = jax.random.split(key_holder[0])
+        return sub
+
+    def visit(tree, prefix=""):
+        if not isinstance(tree, dict):
+            return tree
+        new = {}
+        for name, sub in tree.items():
+            p = f"{prefix}/{name}"
+            if isinstance(sub, dict) and re.search(targets, p) and \
+                    ("w" in sub or "qw" in sub):
+                w = sub.get("w")
+                if w is None:  # quantized base: derive dims from packed qw
+                    qw = sub["qw"]
+                    packed = 2 if qw.dtype == jnp.uint8 else 1
+                    stack = qw.shape[0] if qw.ndim == 3 else 0
+                    d_in = qw.shape[-2] * packed
+                    d_out = qw.shape[-1]
+                    cn = None
+                else:
+                    stack = w.shape[0] if w.ndim == 3 else 0
+                    d_in, d_out = w.shape[-2:]
+                    if method == "dora":
+                        cn = (jax.vmap(_col_norm)(w) if w.ndim == 3
+                              else _col_norm(w))
+                    else:
+                        cn = None
+                sub = dict(sub)
+                sub["lora"] = init_lora(next_key(), d_in, d_out, rank=rank,
+                                        alpha=alpha,
+                                        method="rslora" if method == "rslora"
+                                        else method, w_col_norm=cn,
+                                        stack=stack)
+                new[name] = sub
+            else:
+                new[name] = visit(sub, p) if isinstance(sub, dict) else sub
+        return new
+
+    return visit(params)
+
+
+def trainable_mask(params: dict, method: str = "lora") -> dict:
+    """True for leaves the optimizer should update (adapters only)."""
+    if method == "full":
+        return jax.tree.map(lambda _: True, params)
+
+    def visit(tree, in_lora=False):
+        if isinstance(tree, dict):
+            return {k: visit(v, in_lora or k == "lora") for k, v in tree.items()}
+        return bool(in_lora)
+
+    return visit(params)
+
+
+def merge_lora(params: dict) -> dict:
+    """Fold adapters into base weights (deployment)."""
+    def visit(tree):
+        if not isinstance(tree, dict):
+            return tree
+        if "lora" in tree and "w" in tree:
+            t = dict(tree)
+            lo = t.pop("lora")
+            delta = (lo["a"] @ lo["b"]) * lo["scaling"][..., None]
+            t["w"] = (t["w"].astype(jnp.float32) + delta).astype(t["w"].dtype)
+            return {k: visit(v) if isinstance(v, dict) else v
+                    for k, v in t.items()}
+        return {k: visit(v) if isinstance(v, dict) else v
+                for k, v in tree.items()}
+    return visit(params)
+
+
+def count_trainable(params: dict, mask: dict) -> Tuple[int, int]:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda p, m: p.size if m else 0, params, mask))
+    total = jax.tree.leaves(jax.tree.map(lambda p: p.size, params))
+    return int(sum(leaves)), int(sum(total))

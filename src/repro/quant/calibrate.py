@@ -1,0 +1,169 @@
+"""Post-training quantization calibration: GPTQ, AWQ, SmoothQuant.
+
+These implement the *algorithms* at matrix level (the part the paper's
+``c_inf`` arm varies); ``quantize_tree(calib=...)`` folds the resulting
+per-channel equalization scales into the weights.
+
+GPTQ  — column-by-column quantization with Hessian-driven error
+        compensation (Frantar et al. 2022; Cholesky formulation).
+AWQ   — activation-aware per-in-channel scale search minimizing the
+        layer-output error on calibration activations (Lin et al. 2024).
+SmoothQuant — closed-form difficulty migration s_j = amax_x^α / amax_w^(1-α)
+        (Xiao et al. 2023).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# RTN helper
+
+
+def _rtn(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# GPTQ
+
+
+def gptq_quantize_matrix(w: np.ndarray, hessian: np.ndarray, *,
+                         bits: int = 4, percdamp: float = 0.01,
+                         block: int = 128) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize W (K, N) given H = 2 E[x xᵀ] (K, K).
+
+    Processes columns of Wᵀ in blocks; after quantizing row k the residual
+    error is propagated to the not-yet-quantized rows through the inverse
+    Hessian (Cholesky form), which is what lets GPTQ beat round-to-nearest.
+    Returns (w_dequantized, per-col scales).
+    """
+    w = np.array(w, np.float64)
+    k, n = w.shape
+    h = np.array(hessian, np.float64)
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(h))
+    h[np.diag_indices(k)] += damp
+    # Hinv via Cholesky of inverse (upper), as in the reference impl
+    hinv = np.linalg.inv(h)
+    hinv = np.linalg.cholesky(hinv).T          # upper triangular
+
+    qmax = 2 ** (bits - 1) - 1
+    scale = np.maximum(np.max(np.abs(w), axis=0), 1e-8) / qmax
+
+    q_out = np.zeros_like(w)
+    for b0 in range(0, k, block):
+        b1 = min(b0 + block, k)
+        w_blk = w[b0:b1].copy()
+        err_blk = np.zeros_like(w_blk)
+        for i in range(b1 - b0):
+            ki = b0 + i
+            d = hinv[ki, ki]
+            q = np.clip(np.round(w_blk[i] / scale), -qmax - 1, qmax)
+            dq = q * scale
+            q_out[ki] = dq
+            err = (w_blk[i] - dq) / d
+            # propagate within block
+            w_blk[i + 1:] -= np.outer(hinv[ki, ki + 1:b1], err)
+            err_blk[i] = err
+        # propagate to the remaining rows
+        if b1 < k:
+            w[b1:] -= hinv[b0:b1, b1:].T @ err_blk
+    return q_out, scale
+
+
+def hessian_from_inputs(x: np.ndarray) -> np.ndarray:
+    """H = 2 X Xᵀ / n from calibration activations x (n, K)."""
+    x = np.asarray(x, np.float64)
+    return 2.0 * (x.T @ x) / max(len(x), 1)
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant
+
+
+def smoothquant_scales(act_amax: jnp.ndarray, w: jnp.ndarray,
+                       alpha: float = 0.5) -> jnp.ndarray:
+    """Per-in-channel equalization s_j: activations divided by s, weights
+    multiplied (folded by ``quantize_tree``).  Returns the *weight-side*
+    multiplier (K,)."""
+    w_amax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
+    s = (jnp.maximum(act_amax, 1e-8) ** alpha) / (w_amax ** (1.0 - alpha))
+    return jnp.maximum(s, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# AWQ
+
+
+def awq_search_scales(w: jnp.ndarray, x_calib: jnp.ndarray, *,
+                      bits: int = 4, n_grid: int = 20) -> jnp.ndarray:
+    """Grid-search per-in-channel scales minimizing ‖x(W) − x·Q(W·s)/s‖²
+    on calibration activations (the AWQ objective)."""
+    act_amax = jnp.max(jnp.abs(x_calib), axis=0)            # (K,)
+    y_ref = x_calib @ w
+    best_err = jnp.inf
+    best_s = jnp.ones((w.shape[0],))
+    for g in range(n_grid):
+        ratio = g / n_grid
+        s = jnp.maximum(act_amax, 1e-8) ** ratio
+        s = s / jnp.sqrt(jnp.maximum(s.max() * s.min(), 1e-12))
+        q, sc = _rtn(w * s[:, None], bits)
+        wq = (q * sc[None, :]) / s[:, None]
+        err = jnp.mean((x_calib @ wq - y_ref) ** 2)
+        best_s = jnp.where(err < best_err, s, best_s)
+        best_err = jnp.minimum(err, best_err)
+    return best_s
+
+
+# ---------------------------------------------------------------------------
+# Model-level capture (proxy models, scan_layers=False)
+
+
+def collect_linear_inputs(lm, params, tokens, *, targets=("wq", "gate")):
+    """Run a forward pass capturing per-linear input activations.
+
+    Works on non-scanned proxy models by monkey-patching linear_apply's
+    capture hook; returns {path: activations (n, K)}.  Used by the AE-LLM
+    evaluator when c_inf.quant_method ∈ {gptq, awq, smoothquant}.
+    """
+    from repro.models import layers as L
+    captured: dict = {}
+    orig = L.linear_apply
+
+    def wrapper(p, x):
+        wid = id(p.get("w", p.get("qw")))
+        if wid in wanted:
+            captured[wanted[wid]] = np.asarray(
+                x.reshape(-1, x.shape[-1])[:256].astype(jnp.float32))
+        return orig(p, x)
+
+    # map weight ids -> paths
+    wanted = {}
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            for name, sub in tree.items():
+                pth = f"{prefix}/{name}"
+                if isinstance(sub, dict) and ("w" in sub or "qw" in sub) and \
+                        any(t in pth.split("/")[-1] for t in targets):
+                    wanted[id(sub.get("w", sub.get("qw")))] = pth
+                walk(sub, pth) if isinstance(sub, dict) else None
+    walk(params)
+
+    L.linear_apply = wrapper
+    try:
+        # non-jit so the python hook runs
+        lm.backbone(params, tokens, mode="train", train=False)
+    finally:
+        L.linear_apply = orig
+    return captured

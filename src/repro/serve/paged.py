@@ -1,0 +1,86 @@
+"""Paged KV cache (PagedAttention adapted for TPU).
+
+vLLM pages are 16-token and pointer-chased per token — efficient on GPUs
+with per-thread gathers, hostile to TPU's vector memory system.  The TPU
+adaptation (DESIGN.md §3): 256-token pages (lane-aligned), a per-slot block
+table, and page gathers via ``jnp.take`` along the page axis — one gather
+per decode step instead of per token.
+
+Equivalence with contiguous caches is property-tested in
+tests/test_serving.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+PAGE = 256
+
+
+class PagedKVPool:
+    """Host-side allocator; device arrays are functional (returned anew)."""
+
+    def __init__(self, n_pages: int, kv_heads: int, head_dim: int,
+                 max_pages_per_slot: int, n_slots: int,
+                 dtype=jnp.bfloat16):
+        self.n_pages = n_pages
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        self.dtype = dtype
+        self.free = list(range(n_pages - 1, 0, -1))  # page 0 = null page
+        self.block_table = jnp.zeros((n_slots, max_pages_per_slot), jnp.int32)
+        self.k_pages = jnp.zeros((n_pages, PAGE, kv_heads, head_dim), dtype)
+        self.v_pages = jnp.zeros((n_pages, PAGE, kv_heads, head_dim), dtype)
+
+    def alloc(self, slot: int, seq_len: int):
+        """Reserve pages for slot; returns updated block table."""
+        need = (seq_len + PAGE - 1) // PAGE
+        pages = [self.free.pop() for _ in range(need)]
+        bt = self.block_table
+        for i, p in enumerate(pages):
+            bt = bt.at[slot, i].set(p)
+        self.block_table = bt
+        return pages
+
+    def release(self, slot: int):
+        used = [int(p) for p in self.block_table[slot] if int(p) != 0]
+        self.free.extend(used)
+        self.block_table = self.block_table.at[slot].set(0)
+
+
+def paged_write(k_pages, v_pages, block_table, slot, pos, k_new, v_new):
+    """Write one token's K/V at logical position ``pos`` of ``slot``.
+    k_new/v_new: (kvh, hd)."""
+    page_idx = block_table[slot, pos // PAGE]
+    off = pos % PAGE
+    k_pages = jax.lax.dynamic_update_slice(
+        k_pages, k_new[None, None].astype(k_pages.dtype), (page_idx, off, 0, 0))
+    v_pages = jax.lax.dynamic_update_slice(
+        v_pages, v_new[None, None].astype(v_pages.dtype), (page_idx, off, 0, 0))
+    return k_pages, v_pages
+
+
+def paged_attention(q, k_pages, v_pages, block_table, slot, length,
+                    *, num_heads: int) -> jax.Array:
+    """Decode attention for one slot against its paged KV.
+
+    q: (H, hd).  Gathers the slot's pages (one take), then standard
+    masked attention over the gathered (max_pages·PAGE) context.
+    """
+    bt = block_table[slot]                              # (max_pages,)
+    k = jnp.take(k_pages, bt, axis=0)                   # (P, PAGE, kvh, hd)
+    v = jnp.take(v_pages, bt, axis=0)
+    p, _, kvh, hd = k.shape
+    k = k.reshape(p * PAGE, kvh, hd)
+    v = v.reshape(p * PAGE, kvh, hd)
+    g = num_heads // kvh
+    qg = q.reshape(kvh, g, hd)
+    scores = jnp.einsum("kgd,tkd->kgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    valid = jnp.arange(p * PAGE) < length
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("kgt,tkd->kgd", probs, v.astype(jnp.float32))
+    return o.reshape(num_heads, hd).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Logical-axis annotation.
+
+``logical(x, axes)`` documents the *logical* axes of a parameter at its
+creation site.  Actual device placement is decided by path-based rules in
+``repro.sharding.rules`` (robust under scan-stacking, quantization swaps and
+PEFT wrapping, where array identities change but paths are stable), so this
+helper is an identity at runtime — it exists so every parameter's intended
+layout is written down next to its initializer.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def logical(x: jax.Array, axes) -> jax.Array:  # noqa: ARG001 - documentation
+    return x

@@ -1,0 +1,61 @@
+"""Ambient mesh context.
+
+Model code calls :func:`maybe_constrain` to attach sharding constraints
+when a mesh is active (training / dry-run under ``with use_mesh(mesh):``)
+and silently skips them on single-device CPU smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: ContextVar[Optional[Mesh]] = ContextVar("repro_mesh", default=None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def maybe_constrain(x: jax.Array, *axes) -> jax.Array:
+    """Constrain ``x`` to PartitionSpec(*axes) if a mesh is active.
+
+    Axis entries naming mesh axes absent from the active mesh degrade to
+    ``None`` so the same model code runs on 1-axis and 3-axis meshes.
+    Dims the axis size does not divide also degrade to ``None`` (keeps
+    GSPMD from padding tensors we'd rather replicate).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, a in enumerate(axes):
+        if a is None:
+            fixed.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        names = tuple(n for n in names if n in mesh.shape)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if not names or x.shape[dim] % size != 0:
+            fixed.append(None)
+        elif len(names) == 1:
+            fixed.append(names[0])
+        else:
+            fixed.append(names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

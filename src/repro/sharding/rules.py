@@ -1,0 +1,207 @@
+"""Path-based parameter partition rules (T5X/MaxText-style).
+
+``make_param_specs(shapes, mesh, cfg)`` walks the parameter pytree and
+assigns a :class:`~jax.sharding.PartitionSpec` per leaf by matching the
+leaf's tree path against ordered regex rules.  Rules are written for the
+*unstacked* parameter; leaves carrying extra leading dims (scan-over-layers
+stacking) are left-padded with ``None``.
+
+Tensor-parallel choices (see DESIGN.md §6):
+  * projections shard their flattened head dim (``H*head_dim`` — always a
+    multiple of the model-axis size for the assigned archs);
+  * MoE expert stacks shard the expert dim when divisible (EP), else the
+    per-expert hidden dim (TP fallback);
+  * embeddings shard the vocab dim;
+  * norms and biases replicate.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Each rule: (path_regex, spec_builder(shape, ctx) -> P)
+def _p(*axes):
+    def build(shape, ctx):  # noqa: ARG001
+        return P(*axes)
+    return build
+
+
+def _expert_spec(shape: tuple, ctx: dict):
+    """(E, d_in, d_out) expert stacks: EP over model axis when divisible."""
+    model = ctx["model_size"]
+    if shape[0] % model == 0:
+        return P("model", None, None)
+    # TP fallback: shard per-expert output dim
+    return P(None, None, "model")
+
+
+RULES = [
+    # --- embeddings / head ---
+    (r"(^|/)embed/w$", _p("model", None)),
+    (r"(^|/)(lm_head|unembed)/w$", _p(None, "model")),
+    # --- attention projections (flattened head dim sharded) ---
+    (r"/attn[^/]*/(wq|wk|wv)/w$", _p(None, "model")),
+    (r"/attn[^/]*/(wq|wk|wv)/b$", _p("model")),
+    (r"/attn[^/]*/wo/w$", _p("model", None)),
+    # MLA projections
+    (r"/attn[^/]*/(kv_down|q_down|k_rope)/w$", _p(None, None)),
+    (r"/attn[^/]*/(kv_up_k|kv_up_v|q_up)/w$", _p(None, "model")),
+    # --- cross attention (VLM / enc-dec) ---
+    (r"/xattn/(wq|wk|wv)/w$", _p(None, "model")),
+    (r"/xattn/wo/w$", _p("model", None)),
+    # --- dense MLP ---
+    (r"/mlp/(gate|up)/w$", _p(None, "model")),
+    (r"/mlp/down/w$", _p("model", None)),
+    # --- MoE ---
+    (r"/moe/router/w$", _p(None, None)),
+    (r"/moe/(gate|up)_e$", _expert_spec),
+    (r"/moe/down_e$",
+     lambda shape, ctx: (P("model", None, None) if shape[0] % ctx["model_size"] == 0
+                         else P(None, "model", None))),
+    (r"/moe/shared/(gate|up)/w$", _p(None, "model")),
+    (r"/moe/shared/down/w$", _p("model", None)),
+    # --- RWKV6 ---
+    (r"/rwkv/(wr|wk|wv|wg)/w$", _p(None, "model")),
+    (r"/rwkv/wout/w$", _p("model", None)),
+    (r"/rwkv/wdecay/(w1|w2)$", _p(None, None)),
+    (r"/rwkv/tmix/.*$", _p(None)),
+    # --- Mamba ---
+    (r"/mamba/in_proj/w$", _p(None, "model")),
+    (r"/mamba/out_proj/w$", _p("model", None)),
+    (r"/mamba/(conv_w|conv_b|A_log|D|dt_bias)$",
+     lambda shape, ctx: P(*( ("model",) + (None,) * (len(shape) - 1) ))
+     if shape[0] % ctx["model_size"] == 0 else P(*((None,) * len(shape)))),
+    (r"/mamba/x_proj/w$", _p("model", None)),
+    (r"/mamba/dt_proj/w$", _p(None, "model")),
+    # --- LoRA adapters (follow the wrapped matmul's column sharding) ---
+    (r"/lora/a$", _p(None, None)),
+    (r"/lora/b$", _p(None, "model")),
+    (r"/lora/m$", _p("model")),
+    # --- quantized weights inherit the dense layout ---
+    (r"/(gate|up|wq|wk|wv|q_up|kv_up_k|kv_up_v)/qw$", _p(None, "model")),
+    (r"/(down|wo)/qw$", _p("model", None)),
+    (r"/(gate|up|wq|wk|wv|q_up|kv_up_k|kv_up_v)/scale$", _p("model")),
+    (r"/(down|wo)/scale$", _p(None)),
+    # --- norms, biases, scalars: replicate ---
+    (r".*", lambda shape, ctx: P(*((None,) * len(shape)))),
+]
+
+
+def spec_for_path(path: str, shape: tuple, ctx: dict) -> P:
+    for pat, build in RULES:
+        if re.search(pat, path):
+            spec = build(shape, ctx)
+            # left-pad for stacked leading dims (scan over layers / groups)
+            pad = len(shape) - len(spec)
+            if pad > 0:
+                spec = P(*((None,) * pad + tuple(spec)))
+            # sanity: never shard a dim the mesh axis doesn't divide when
+            # the platform requires it; GSPMD pads, so we allow uneven.
+            return spec
+    raise AssertionError(f"no rule matched {path}")
+
+
+def _keystr(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def make_param_specs(params: Any, mesh: Mesh, *, fsdp: bool = False,
+                     fsdp_min_size: int = 1 << 20) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    ``fsdp=True`` additionally shards every large leaf over the "data"
+    axis (ZeRO-3 style): the first dim the TP rule left unsharded and
+    the data axis divides gets "data" appended.  XLA then all-gathers
+    the shard on use and reduce-scatters its gradient — params, grads
+    and optimizer state all live 1/(data·model)-sharded.
+    """
+    ctx = {"model_size": mesh.shape.get("model", 1),
+           "data_size": mesh.shape.get("data", 1)}
+
+    def leaf_spec(path, leaf):
+        spec = spec_for_path(_keystr(path), tuple(leaf.shape), ctx)
+        if fsdp:
+            spec = _with_fsdp(spec, tuple(leaf.shape), ctx)
+        return _sanitize(spec, tuple(leaf.shape), ctx)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def _sanitize(spec: P, shape: tuple, ctx: dict) -> P:
+    """Drop axis assignments the dimension size does not divide (pjit
+    rejects uneven explicit in_shardings; e.g. granite's vocab 49155 or
+    whisper's 51865 on a 16-way axis replicate instead)."""
+    sizes = {"model": ctx["model_size"], "data": ctx["data_size"],
+             "pod": ctx.get("pod_size", 1)}
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        out.append(entry if shape[dim] % total == 0 else None)
+    return P(*out)
+
+
+def _with_fsdp(spec: P, shape: tuple, ctx: dict,
+               min_size: int = 1 << 20) -> P:
+    n = 1
+    for s in shape:
+        n *= s
+    if n < min_size or ctx["data_size"] == 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # prefer the *largest* unsharded dim (embed/hidden), scanning right
+    # to left so stacked-layer leading dims stay replicated
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if entries[i] is None and shape[i] % ctx["data_size"] == 0 \
+                and shape[i] >= ctx["data_size"]:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def make_param_shardings(params: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    specs = make_param_specs(params, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch specs
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def batch_spec(mesh: Mesh, batch: int, *, trailing: int = 1) -> P:
+    """Spec for (batch, ...) inputs: batch over DP axes when divisible."""
+    axes = dp_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and batch % total == 0:
+        return P(axes, *((None,) * trailing))
+    return P(*((None,) * (trailing + 1)))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

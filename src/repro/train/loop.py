@@ -1,0 +1,251 @@
+"""Training loop: jitted step factory + fault-tolerant Trainer.
+
+``make_train_step`` builds the pjit-ed update:
+    grads (microbatched lax.scan accumulation) -> [compression w/ error
+    feedback] -> global-norm clip -> AdamW (masked for PEFT).
+
+``Trainer`` owns checkpointing (async, atomic), auto-resume from the
+latest valid step, the straggler watchdog, and restart-on-failure
+semantics.  On real fleets the watchdog's action hook triggers the
+controller; here it logs and counts (unit-tested in
+tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataState
+from repro.optim.adamw import (AdamWState, adamw_update, clip_by_global_norm,
+                               init_adamw)
+from repro.optim.compress import compress_grads, init_error_feedback
+from repro.sharding.ctx import use_mesh
+
+
+# ---------------------------------------------------------------------------
+# Step factory
+
+
+def make_train_step(lm, *, lr, mask=None, max_grad_norm: float = 1.0,
+                    num_microbatches: int = 1, compress: str = "none",
+                    weight_decay: float = 0.1):
+    """Returns ``step(params, opt_state, batch, err_fb) ->
+    (params, opt_state, err_fb, metrics)`` (pure; jit/pjit outside)."""
+
+    def loss_fn(params, mb):
+        return lm.loss(params, mb)
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            # allow_int: frozen int8/int4 (QLoRA) leaves get float0
+            # cotangents, which clip/adamw skip
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(params, batch)
+            return grads, metrics
+
+        def mb_slice(x, i):
+            b = x.shape[0] // num_microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+        def body(acc, i):
+            mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(params, mb)
+            acc = jax.tree.map(
+                lambda a, gg: a if a.size == 0 else jnp.add(a, gg),
+                acc, g)
+            return acc, metrics
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else jnp.zeros((0,), jnp.float32), params)
+        gsum, metrics_all = jax.lax.scan(
+            body, zero, jnp.arange(num_microbatches))
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_all)
+        grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+        return grads, metrics
+
+    def step(params, opt_state: AdamWState, batch, err_fb):
+        grads, metrics = compute_grads(params, batch)
+        if compress != "none":
+            grads, err_fb, ratio = compress_grads(grads, err_fb,
+                                                  scheme=compress)
+            metrics = dict(metrics, compress_ratio=jnp.asarray(ratio))
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr,
+                                         mask=mask,
+                                         weight_decay=weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, err_fb, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Straggler watchdog
+
+
+@dataclass
+class StragglerWatchdog:
+    """EMA-based step-time anomaly detector.
+
+    On a fleet, ``action`` would tell the controller to evict/replace the
+    slow host; here it records events so behaviour is testable.
+    """
+    threshold: float = 3.0
+    ema_decay: float = 0.9
+    warmup_steps: int = 5
+    ema: Optional[float] = None
+    seen: int = 0
+    events: list = field(default_factory=list)
+    action: Optional[Callable[[int, float, float], None]] = None
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.seen += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = (self.seen > self.warmup_steps
+                        and dt > self.threshold * self.ema)
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+            if self.action:
+                self.action(step, dt, self.ema)
+        else:
+            # EMA tracks healthy steps only (stragglers would poison it)
+            self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return is_straggler
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+
+
+class Trainer:
+    def __init__(self, lm, pipeline, *, lr, ckpt_dir: Optional[str] = None,
+                 mesh=None, param_shardings=None, mask=None,
+                 num_microbatches: int = 1, compress: str = "none",
+                 ckpt_every: int = 100, keep: int = 3,
+                 max_grad_norm: float = 1.0, log_every: int = 10,
+                 log_fn=print):
+        self.lm = lm
+        self.pipe = pipeline
+        self.mesh = mesh
+        self.mask = mask
+        self.compress = compress
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.log = log_fn
+        self._lr = lr
+        self.watchdog = StragglerWatchdog()
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep) if ckpt_dir else None
+
+        self._step_fn = make_train_step(
+            lm, lr=lr, mask=mask, num_microbatches=num_microbatches,
+            compress=compress, max_grad_norm=max_grad_norm)
+        self._jit_step = jax.jit(self._step_fn, donate_argnums=(0, 1, 3))
+
+        self.params = None
+        self.opt_state = None
+        self.err_fb = None
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self, key):
+        restored = self.mgr.restore() if self.mgr else None
+        if restored is not None:
+            like = jax.eval_shape(self.lm.init, key)
+            self.params = CheckpointManager._unflatten_like(
+                {k[len("params/"):]: v for k, v in restored["arrays"].items()
+                 if k.startswith("params/")}, like)
+            self.opt_state = self._restore_opt(restored)
+            self.step = restored["step"]
+            if restored["data_state"]:
+                self.pipe.restore(DataState.from_dict(restored["data_state"]))
+            self.log(f"[trainer] resumed from step {self.step}")
+        else:
+            self.params = self.lm.init(key)
+            self.opt_state = init_adamw(self.params, self.mask)
+        if self.compress != "none":
+            self.err_fb = init_error_feedback(
+                jax.tree.map(lambda p: p, self.params))
+        else:
+            self.err_fb = init_adamw(self.params, self.mask).mu  # zeros tree
+        return self.params
+
+    def set_params(self, params, *, mask=None,
+                   num_microbatches: int = 1, lr=None):
+        """Swap in transformed params (quantized / PEFT-wrapped): the
+        optimizer state, error-feedback tree, trainable mask and jitted
+        step are rebuilt for the new pytree structure."""
+        self.params = params
+        self.mask = mask
+        self.opt_state = init_adamw(params, mask)
+        self.err_fb = init_adamw(params, mask).mu
+        self._step_fn = make_train_step(
+            self.lm, lr=lr if lr is not None else self._lr, mask=mask,
+            num_microbatches=num_microbatches, compress=self.compress)
+        self._jit_step = jax.jit(self._step_fn, donate_argnums=(0, 1, 3))
+        return params
+
+    def _restore_opt(self, restored):
+        base = init_adamw(self.params, self.mask)
+        arrays = restored["arrays"]
+        def pick(prefix, like):
+            flat = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path, proto in flat[0]:
+                k = prefix + "/".join(
+                    str(getattr(kk, "key", getattr(kk, "idx", kk)))
+                    for kk in path)
+                leaves.append(arrays[k].astype(proto.dtype)
+                              if k in arrays else proto)
+            return jax.tree_util.tree_unflatten(flat[1], leaves)
+        return AdamWState(step=jnp.asarray(arrays.get("opt/step",
+                                                      self.step), jnp.int32),
+                          mu=pick("opt/mu/", base.mu),
+                          nu=pick("opt/nu/", base.nu))
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int):
+        assert self.params is not None, "call init_or_resume first"
+        ctx = use_mesh(self.mesh) if self.mesh is not None else _null_ctx()
+        history = []
+        with ctx:
+            while self.step < num_steps:
+                t0 = time.perf_counter()
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.pipe.next_batch().items()}
+                self.params, self.opt_state, self.err_fb, metrics = \
+                    self._jit_step(self.params, self.opt_state, batch,
+                                   self.err_fb)
+                self.step += 1
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(self.step, dt)
+                if self.step % self.log_every == 0 or self.step == num_steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    history.append({"step": self.step, "dt": dt, **m})
+                    self.log(f"[step {self.step}] loss={m.get('loss', 0):.4f} "
+                             f"ce={m.get('ce_loss', 0):.4f} dt={dt*1e3:.0f}ms")
+                if self.mgr and self.step % self.ckpt_every == 0:
+                    self.mgr.save_async(self.step, self.params,
+                                        self.opt_state, self.pipe.state)
+        if self.mgr:
+            self.mgr.save(self.step, self.params, self.opt_state,
+                          self.pipe.state)
+        return history
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

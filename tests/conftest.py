@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices.
+"""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64, seed=0):
+    import jax.numpy as jnp
+    from repro.configs.specs import modality_spec
+    r = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "labels": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+    }
+    ms = modality_spec(cfg, b)
+    if ms is not None:
+        batch["modality_input"] = jnp.asarray(
+            r.normal(0, 0.02, ms.shape), ms.dtype)
+    return batch

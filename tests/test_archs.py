@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests: reduced config of the same family,
+one forward/train step + prefill/decode on CPU, asserting output shapes
+and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES
+from repro.configs.specs import cell_supported, input_specs, modality_spec
+from repro.models.model import LM
+from tests.conftest import make_batch
+
+EXPECTED_PARAMS_B = {
+    "stablelm-1.6b": (1.4, 1.9),
+    "deepseek-coder-33b": (31, 35),
+    "llama3.2-1b": (1.0, 1.5),
+    "qwen2-1.5b": (1.3, 1.8),
+    "rwkv6-1.6b": (1.4, 2.1),
+    "llama4-scout-17b-a16e": (100, 115),
+    "granite-moe-3b-a800m": (2.9, 3.7),
+    "whisper-base": (0.05, 0.15),
+    "llama-3.2-vision-11b": (9, 12),
+    "jamba-1.5-large-398b": (380, 415),
+}
+EXPECTED_ACTIVE_B = {
+    "llama4-scout-17b-a16e": (14, 20),
+    "granite-moe-3b-a800m": (0.6, 1.1),
+    "jamba-1.5-large-398b": (85, 105),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+    if arch in EXPECTED_ACTIVE_B:
+        lo, hi = EXPECTED_ACTIVE_B[arch]
+        na = cfg.active_param_count() / 1e9
+        assert lo <= na <= hi, f"{arch}: active {na:.2f}B outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+
+    def loss_fn(p):
+        return lm.loss(p, batch)
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: non-finite grads"
+    assert float(gnorm) > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    b, s, max_len = 2, 32, 64
+    batch = make_batch(cfg, b=b, s=s)
+    cache = lm.init_cache(b, max_len)
+    logits, cache = jax.jit(lm.prefill)(
+        params, batch["tokens"], cache,
+        modality_input=batch.get("modality_input"))
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    step = jax.jit(lm.decode_step)
+    for i in range(3):
+        logits, cache = step(params, tok, cache,
+                             jnp.full((b,), s + i, jnp.int32))
+        assert logits.shape == (b, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode logits == full-context logits (cache
+    correctness), for every architecture family."""
+    cfg = get_smoke_config(arch).with_(dtype="float32")
+    if cfg.moe is not None:
+        # capacity-factor drops are train/prefill-only semantics; make
+        # eval dropless so decode and full-context are comparable
+        import dataclasses
+        cfg = cfg.with_(moe=dataclasses.replace(
+            cfg.moe, eval_capacity_factor=float(cfg.moe.num_experts)))
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(1))
+    b, s = 1, 16
+    batch = make_batch(cfg, b=b, s=s, seed=3)
+    toks = batch["tokens"]
+    full = lm.logits(params, toks,
+                     modality_input=batch.get("modality_input"))
+
+    cache = lm.init_cache(b, 32)
+    prefill_n = 8
+    logits_p, cache = lm.prefill(
+        params, toks[:, :prefill_n], cache,
+        modality_input=batch.get("modality_input"))
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, prefill_n - 1]),
+        atol=2e-2, rtol=2e-2)
+    step = jax.jit(lm.decode_step)
+    for i in range(prefill_n, s):
+        logits_d, cache = step(params, toks[:, i],
+                               cache, jnp.full((b,), i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(full[:, i]), atol=2e-2,
+            rtol=2e-2)
+
+
+def test_cell_support_grid():
+    """The 40-cell grid resolves: 33 runnable + 7 documented skips."""
+    n_ok = n_skip = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_supported(cfg, shape)
+            n_ok += ok
+            n_skip += not ok
+            if not ok:
+                assert shape.name == "long_500k"
+                assert "quadratic" in why
+    assert n_ok == 33 and n_skip == 7
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_abstract(arch, shape_name):
+    """input_specs are pure ShapeDtypeStructs (no allocation)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = cell_supported(cfg, shape)
+    if not ok:
+        pytest.skip("unsupported cell")
+    specs = input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if shape.mode == "train":
+        assert specs["batch"]["tokens"].shape == (shape.global_batch,
+                                                  shape.seq_len)
+        if cfg.family in ("audio", "vlm"):
+            assert "modality_input" in specs["batch"]
+    elif shape.mode == "decode":
+        assert specs["token"].shape == (shape.global_batch,)

@@ -1,0 +1,113 @@
+"""Fault tolerance: atomic/async checkpoints, integrity, auto-resume,
+elastic restore, corruption recovery."""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import LM
+from repro.train.loop import Trainer
+
+
+def _trained(tmp_path, steps=12, every=5):
+    cfg = get_smoke_config("llama3.2-1b")
+    lm = LM(cfg)
+    pipe = SyntheticLMData(cfg.vocab_size, 16, 2, seed=0)
+    tr = Trainer(lm, pipe, lr=1e-3, ckpt_dir=str(tmp_path), log_every=100,
+                 ckpt_every=every)
+    tr.init_or_resume(jax.random.PRNGKey(0))
+    tr.run(steps)
+    tr.mgr.wait()
+    return cfg, lm, tr
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    cfg, lm, tr1 = _trained(tmp_path, steps=12)
+    # fresh trainer resumes at step 12 with identical params
+    pipe = SyntheticLMData(cfg.vocab_size, 16, 2, seed=0)
+    tr2 = Trainer(lm, pipe, lr=1e-3, ckpt_dir=str(tmp_path), log_every=100)
+    tr2.init_or_resume(jax.random.PRNGKey(1))  # different key: must load
+    assert tr2.step == 12
+    for a, b in zip(jax.tree.leaves(tr1.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # training continues bit-identically vs an uninterrupted run
+    tr2.run(16)
+    pipe3 = SyntheticLMData(cfg.vocab_size, 16, 2, seed=0)
+    tr3 = Trainer(lm, pipe3, lr=1e-3, ckpt_dir=None, log_every=100)
+    tr3.init_or_resume(jax.random.PRNGKey(0))
+    tr3.run(16)
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(tr2.params),
+                            jax.tree.leaves(tr3.params)))
+    assert d < 1e-4, f"resumed trajectory diverged by {d}"
+
+
+def test_checkpoint_gc_keeps_n(tmp_path):
+    _trained(tmp_path, steps=30, every=5)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    assert len(mgr.all_steps()) <= 3 + 1  # keep + possibly in-flight final
+
+
+def test_corrupt_checkpoint_falls_back(tmp_path):
+    cfg, lm, tr = _trained(tmp_path, steps=10, every=5)
+    steps = sorted(tr.mgr.all_steps())
+    assert len(steps) >= 2
+    latest = steps[-1]
+    # corrupt the newest shard file
+    d = pathlib.Path(tmp_path) / f"step_{latest:09d}"
+    shard = next(d.glob("shard_*.npz"))
+    shard.write_bytes(b"garbage")
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    restored = mgr.restore()
+    assert restored is not None, "no fallback checkpoint found"
+    assert restored["step"] in steps[:-1], \
+        f"restored corrupted step {restored['step']}"
+
+
+def test_elastic_restore_reshard(tmp_path):
+    """Checkpoint saved from one layout restores into any mesh whose
+    axes divide the global shapes (here: plain single-device reload of
+    global arrays, then re-slice helper)."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(7, params, None, None)
+    restored = mgr.restore(like={"params": params})
+    arrays = restored["arrays"]
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        k = "params/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        assert k in arrays, f"missing {k}"
+        assert arrays[k].shape == leaf.shape
+    # global metadata present for re-sharding
+    import msgpack
+    mani = msgpack.unpackb((pathlib.Path(tmp_path) / "step_000000007" /
+                            "MANIFEST.msgpack").read_bytes())
+    assert mani["step"] == 7
+    any_arr = next(iter(mani["arrays"].values()))
+    assert "shape" in any_arr and "dtype" in any_arr
+
+
+def test_async_checkpoint_nonblocking(tmp_path):
+    cfg = get_smoke_config("llama3.2-1b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    import time
+    t0 = time.perf_counter()
+    mgr.save_async(1, params, None, None)
+    t_submit = time.perf_counter() - t0
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    # async submit returns promptly (snapshot only, write off-thread)
+    assert t_submit < 5.0

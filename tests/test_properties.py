@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pareto import (ParetoArchive, dominates, efficiency_score,
+                               non_dominated_sort, to_min)
+from repro.core.space import (EfficiencyConfig, encode_config, sample_config,
+                              space_for_family)
+from repro.launch.roofline import parse_collectives, shape_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Pareto invariants
+
+
+objs_strategy = st.lists(
+    st.tuples(st.floats(0, 100), st.floats(0.1, 1e4), st.floats(0.1, 1e3),
+              st.floats(0.01, 100)),
+    min_size=1, max_size=40).map(lambda x: np.array(x, np.float64))
+
+
+@given(objs_strategy)
+def test_front_zero_mutually_nondominated(objs):
+    m = to_min(objs)
+    fronts = non_dominated_sort(m)
+    f0 = fronts[0]
+    for i in f0:
+        for j in f0:
+            assert not dominates(m[i], m[j])
+
+
+@given(objs_strategy)
+def test_fronts_partition_population(objs):
+    fronts = non_dominated_sort(to_min(objs))
+    idx = np.concatenate(fronts)
+    assert sorted(idx.tolist()) == list(range(len(objs)))
+
+
+@given(objs_strategy)
+def test_archive_front_is_subset_and_nondominated(objs):
+    a = ParetoArchive()
+    for i, o in enumerate(objs):
+        a.add(i, o)
+    front = a.front()
+    mins = [to_min(np.array([o]))[0] for _, o in front]
+    for i, mi in enumerate(mins):
+        for j, mj in enumerate(mins):
+            if i != j:
+                assert not dominates(mi, mj)
+
+
+@given(st.floats(1.01, 10.0))
+def test_efficiency_score_monotone_in_gains(g):
+    base = np.array([70.0, 100.0, 50.0, 2.0])
+    better = np.array([70.0, 100.0 / g, 50.0 / g, 2.0 / g])
+    assert efficiency_score(better, base) > efficiency_score(base, base)
+
+
+# ---------------------------------------------------------------------------
+# Config space invariants
+
+
+@given(st.integers(0, 10_000))
+def test_sampled_configs_encode_to_fixed_dim(seed):
+    rng = np.random.default_rng(seed)
+    c = sample_config(rng)
+    v = encode_config(c)
+    assert len(v) == len(encode_config(EfficiencyConfig()))
+    assert all(np.isfinite(v))
+
+
+@given(st.integers(0, 10_000))
+def test_ssm_mask_always_respected(seed):
+    rng = np.random.default_rng(seed)
+    c = sample_config(rng, space_for_family("ssm"))
+    assert c.inf.kv_style == "full"
+    assert c.arch.attention == "gqa"
+
+
+# ---------------------------------------------------------------------------
+# Numerics invariants
+
+
+@given(st.integers(1, 4), st.sampled_from([16, 32, 48]),
+       st.integers(0, 1000))
+def test_chunked_ce_matches_dense(b, s, seed):
+    from repro.models.model import chunked_cross_entropy
+    rng = np.random.default_rng(seed)
+    d, v = 16, 64
+    x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    ce1, acc1 = chunked_cross_entropy(x, w, labels, chunk=16)
+    logits = x @ w
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    ce2 = jnp.mean(lse - lab)
+    np.testing.assert_allclose(float(ce1), float(ce2), rtol=1e-4)
+
+
+@given(st.integers(0, 100))
+def test_rope_preserves_norm(seed):
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x)),
+                               np.linalg.norm(np.asarray(y)), rtol=1e-4)
+
+
+@given(st.integers(0, 50))
+def test_quantize_dequantize_bounded_error(seed):
+    from repro.quant.qops import quantize_linear, quantized_matmul
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    p8 = quantize_linear({"w": w}, quant="int8")
+    y8 = quantized_matmul(x, p8)
+    err8 = float(jnp.max(jnp.abs(y8 - x @ w)))
+    assert err8 < 0.6          # |x|·|w_err|·sqrt(K): int8 err ~0.008/elt
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+
+
+@given(st.integers(1, 4096), st.integers(1, 512),
+       st.sampled_from(["f32", "bf16", "s8", "u4"]))
+def test_shape_bytes(n, m, dt):
+    per = {"f32": 4, "bf16": 2, "s8": 1, "u4": 0.5}[dt]
+    assert shape_bytes(f"{dt}[{n},{m}]") == n * m * per
+
+
+def test_parse_collectives_resolves_operand_names():
+    hlo = """
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %dot.1 = f32[128,64]{1,0} dot(%p0, %p0), contracting_dims={1}
+  %all-reduce.1 = f32[128,64]{1,0} all-reduce(%dot.1), replica_groups={}
+  %ag.2 = bf16[64,64]{1,0} convert(%dot.1)
+  %all-gather.7 = bf16[256,64]{1,0} all-gather(%ag.2), dimensions={0}
+"""
+    stats = parse_collectives(hlo)
+    assert stats.count_by_op == {"all-reduce": 1, "all-gather": 1}
+    assert stats.bytes_by_op["all-reduce"] == 128 * 64 * 4
+    assert stats.bytes_by_op["all-gather"] == 64 * 64 * 2

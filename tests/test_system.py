@@ -1,0 +1,197 @@
+"""End-to-end system behaviour: training convergence, microbatching
+equivalence, gradient compression, serving engine, quantized paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticLMData
+from repro.models.model import LM
+from repro.optim.adamw import cosine_schedule, init_adamw
+from repro.train.loop import StragglerWatchdog, Trainer, make_train_step
+
+
+def _tiny_lm(arch="llama3.2-1b", **kw):
+    cfg = get_smoke_config(arch).with_(**kw)
+    return LM(cfg), cfg
+
+
+def test_training_reduces_loss():
+    lm, cfg = _tiny_lm()
+    pipe = SyntheticLMData(cfg.vocab_size, 32, 4, seed=0)
+    tr = Trainer(lm, pipe, lr=cosine_schedule(1e-3, 5, 60), log_every=10,
+                 ckpt_dir=None)
+    tr.init_or_resume(jax.random.PRNGKey(0))
+    hist = tr.run(60)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1, \
+        f"no learning: {hist[0]['loss']} -> {hist[-1]['loss']}"
+
+
+def test_microbatching_matches_full_batch():
+    lm, cfg = _tiny_lm()
+    params = lm.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                                   jnp.int32)}
+    s1 = make_train_step(lm, lr=1e-3, num_microbatches=1)
+    s2 = make_train_step(lm, lr=1e-3, num_microbatches=2)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p1, *_ = jax.jit(s1)(params, opt, batch, zeros)
+    p2, *_ = jax.jit(s2)(params, opt, batch, zeros)
+    d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-2, f"microbatched update diverges: {d}"
+
+
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_gradient_compression_trains(scheme):
+    lm, cfg = _tiny_lm()
+    pipe = SyntheticLMData(cfg.vocab_size, 32, 4, seed=0)
+    tr = Trainer(lm, pipe, lr=1e-3, compress=scheme, log_every=20)
+    tr.init_or_resume(jax.random.PRNGKey(0))
+    hist = tr.run(40)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.5
+
+
+def test_straggler_watchdog_detects():
+    wd = StragglerWatchdog(threshold=2.0, warmup_steps=3)
+    for i in range(10):
+        assert not wd.observe(i, 0.1)
+    assert wd.observe(11, 0.5)          # 5× the EMA -> flagged
+    assert len(wd.events) == 1
+    assert not wd.observe(12, 0.1)      # healthy again; EMA unpoisoned
+
+
+def test_serving_engine_continuous_batching():
+    lm, cfg = _tiny_lm("qwen2-1.5b")
+    from repro.serve.engine import Engine
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = Engine(lm, params, n_slots=2, max_len=64, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (8,)).tolist()
+               for _ in range(5)]
+    ids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    done = eng.run_to_completion()
+    assert set(done) >= set(ids)
+    for i in ids:
+        assert len(done[i].out_tokens) == 8
+    # greedy decoding is deterministic regardless of slot count
+    eng2 = Engine(lm, params, n_slots=3, max_len=64, seed=0)
+    ids2 = [eng2.submit(p, max_new_tokens=8) for p in prompts]
+    done2 = eng2.run_to_completion()
+    for a, b in zip(ids, ids2):
+        assert done[a].out_tokens == done2[b].out_tokens, \
+            "slot count must not change greedy outputs"
+
+
+@pytest.mark.parametrize("quant", ["int8", "int4", "fp8"])
+def test_quantized_forward_close(quant):
+    lm, cfg = _tiny_lm("llama3.2-1b", dtype="float32")
+    from repro.quant.qops import quantize_tree
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    base = lm.logits(params, toks)
+    qparams = quantize_tree(params, quant=quant)
+    qlog = lm.logits(qparams, toks)
+    agree = np.mean(np.asarray(jnp.argmax(base, -1) == jnp.argmax(qlog, -1)))
+    assert agree > 0.5, f"{quant}: top-1 agreement {agree}"
+    assert np.all(np.isfinite(np.asarray(qlog, np.float32)))
+
+
+def test_quantization_shrinks_memory():
+    from repro.quant.qops import memory_bytes, quantize_tree
+    lm, _ = _tiny_lm()
+    params = lm.init(jax.random.PRNGKey(0))
+    base = memory_bytes(params)
+    q8 = memory_bytes(quantize_tree(params, quant="int8"))
+    q4 = memory_bytes(quantize_tree(params, quant="int4"))
+    assert q8 < 0.75 * base
+    assert q4 < q8
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    p1 = SyntheticLMData(1000, 16, 4, seed=7)
+    a = [p1.next_batch()["tokens"] for _ in range(5)]
+    state = p1.state
+    b = p1.next_batch()["tokens"]
+    p2 = SyntheticLMData(1000, 16, 4, seed=7)
+    p2.restore(state)
+    b2 = p2.next_batch()["tokens"]
+    np.testing.assert_array_equal(b, b2)
+    p3 = SyntheticLMData(1000, 16, 4, seed=7)
+    a3 = [p3.next_batch()["tokens"] for _ in range(5)]
+    np.testing.assert_array_equal(a[4], a3[4])
+
+
+def test_peft_lora_trains_only_adapters():
+    from repro.peft.lora import apply_peft, count_trainable, trainable_mask
+    lm, cfg = _tiny_lm()
+    params = lm.init(jax.random.PRNGKey(0))
+    params = apply_peft(params, jax.random.PRNGKey(1), method="lora", rank=4,
+                        alpha=8.0)
+    mask = trainable_mask(params, "lora")
+    n_train, n_total = count_trainable(params, mask)
+    assert 0 < n_train < 0.2 * n_total
+    # one update step leaves frozen weights untouched
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                                   jnp.int32)}
+    step = make_train_step(lm, lr=1e-2, mask=mask)
+    opt = init_adamw(params, mask)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, *_ = jax.jit(step)(params, opt, batch, zeros)
+    flat1 = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat2 = jax.tree_util.tree_flatten_with_path(p2)[0]
+    moved_frozen = moved_lora = 0
+    for (path, a), (_, b) in zip(flat1, flat2):
+        ks = jax.tree_util.keystr(path)
+        changed = bool(jnp.any(a != b))
+        if "/lora" in ks.replace("']['", "/").replace("['", "/"):
+            moved_lora += changed
+        elif "w" in ks:
+            moved_frozen += changed
+    assert moved_lora > 0, "no LoRA parameter moved"
+    assert moved_frozen == 0, f"{moved_frozen} frozen weights moved"
+
+
+def test_qlora_int8_base_trains():
+    """QLoRA: frozen int8 base + trainable adapters — grads must flow
+    through the quantized matmul to the LoRA leaves only."""
+    from repro.peft.lora import apply_peft, trainable_mask
+    from repro.quant.qops import quantize_tree
+    lm, cfg = _tiny_lm()
+    params = lm.init(jax.random.PRNGKey(0))
+    params = quantize_tree(params, quant="int8")
+    params = apply_peft(params, jax.random.PRNGKey(1), method="qlora",
+                        rank=4, alpha=8.0)
+    mask = trainable_mask(params, "qlora")
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                                   jnp.int32)}
+    step = make_train_step(lm, lr=1e-3, mask=mask)
+    opt = init_adamw(params, mask)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, *_ , m = jax.jit(step)(params, opt, batch, zeros)
+    assert np.isfinite(float(m["loss"]))
+    # quantized base unchanged; at least one lora leaf moved
+    moved = 0
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(p2)[0]):
+        ks = jax.tree_util.keystr(path)
+        if "qw" in ks:
+            assert not bool(jnp.any(a != b)), f"quantized base moved: {ks}"
+        if "lora" in ks and bool(jnp.any(a != b)):
+            moved += 1
+    assert moved > 0
