@@ -163,7 +163,11 @@ class ModelConfig:
     ce_chunk: int = 1024              # chunked cross-entropy segment length
     # --- serving-time knobs ---
     # decode attention: eager (batch-local) | cp (context-parallel
-    # flash-decoding combine over a seq-sharded cache; needs a mesh)
+    # flash-decoding combine over a seq-sharded cache; needs a mesh) |
+    # paged_pallas (paged KV pools + the Pallas flash-decoding kernel in
+    # kernels/paged_attention, all slots in one launch; served by
+    # serve/engine.PagedEngine with on-device sampling and a fused
+    # multi-token decode loop)
     decode_attn_impl: str = "eager"
     kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8
     kv_cache_style: str = "full"      # full | gqa | mqa (AE-LLM c_inf arm)

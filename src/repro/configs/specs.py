@@ -45,6 +45,18 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: lm.init_cache(batch, max_len))
 
 
+def abstract_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Paged decode cache sized to hold ``max_len`` tokens per slot
+    (decode_attn_impl="paged_pallas"); page count = slots × pages/slot
+    + the null page."""
+    from repro.serve.paged import PAGE
+    lm = LM(cfg)
+    pps = -(-max_len // PAGE)
+    n_pages = n_slots * pps + 1
+    return jax.eval_shape(
+        lambda: lm.init_paged_cache(n_slots, n_pages, pps, page_size=PAGE))
+
+
 def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     b, s = shape.global_batch, shape.seq_len
     batch = {
@@ -72,9 +84,12 @@ def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     b, s = shape.global_batch, shape.seq_len
+    cache = (abstract_paged_cache(cfg, b, s)
+             if cfg.decode_attn_impl == "paged_pallas"
+             else abstract_cache(cfg, b, s))
     return {
         "token": _sds((b,), I32),
-        "cache": abstract_cache(cfg, b, s),
+        "cache": cache,
         "pos": _sds((b,), I32),
     }
 

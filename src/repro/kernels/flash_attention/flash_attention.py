@@ -55,16 +55,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        qpos = q_start + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 0)
-        kpos = k_start + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 1)
-        mask = kpos < jnp.int32(2**30)                       # all-true
-        if causal:
-            mask = kpos <= qpos
-        if window is not None:
-            mask = jnp.logical_and(mask, kpos > qpos - window)
-        s = jnp.where(mask, s, NEG_INF)
+        if causal or window is not None:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = None
+            if causal:
+                mask = kpos <= qpos
+            if window is not None:
+                w = kpos > qpos - window
+                mask = w if mask is None else jnp.logical_and(mask, w)
+            s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                                   # (bq, 1)
         m_cur = jnp.max(s, axis=1, keepdims=True)

@@ -1,0 +1,22 @@
+"""Public op: paged decode attention with kernel/oracle dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    use_kernel: bool = True) -> jax.Array:
+    """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P);
+    lengths: (S,) -> (S,H,D)."""
+    if use_kernel:
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_attention_pallas)
+        return paged_attention_pallas(q, k_pages, v_pages, block_table,
+                                      lengths, interpret=not _on_tpu())
+    return paged_attention_ref(q, k_pages, v_pages, block_table, lengths)

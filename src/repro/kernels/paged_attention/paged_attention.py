@@ -1,0 +1,115 @@
+"""Pallas TPU paged decode attention (flash-decoding over a paged KV cache).
+
+One launch covers EVERY active slot: grid = (slots, kv_heads, page_blocks)
+with the page axis minor-most, so TPU walks a slot's pages sequentially and
+the online-softmax running state (m, l, acc) lives in VMEM scratch across
+page steps — the flash-decoding recurrence of serve/decode_attn.py, but per
+page instead of per shard.
+
+Pages are STREAMED, never gathered: the block table and per-slot lengths
+ride in as scalar-prefetch operands (``PrefetchScalarGridSpec``), and the
+K/V BlockSpec index maps look the physical page id up as
+``block_table[slot, page_block]`` — each grid step DMAs exactly one
+(page_size, head_dim) tile from HBM.  This is what replaces the
+``jnp.take`` of serve/paged.py, which materialized a contiguous
+(max_pages · page_size) copy of the whole context per decode step.
+
+GQA is handled like kernels/flash_attention: the kv-head grid axis selects
+one stored head, the q block carries that head's ``group`` query heads, and
+repeated KV heads are never materialized.  Pages past a slot's length are
+skipped with ``pl.when`` (their grid steps fetch the null page but run no
+compute); partially-filled last pages are masked via a broadcasted iota
+against the slot's length.  fp32 accumulation throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, page_size: int, n_page_blocks: int):
+    s_i = pl.program_id(0)
+    p_i = pl.program_id(2)
+
+    @pl.when(p_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s_i]
+    page_start = p_i * page_size
+
+    @pl.when(page_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (G, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (G, page)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(p_i == n_page_blocks - 1)
+    def _flush():
+        # length-0 slots (free engine slots) never ran _body: l is 0 and
+        # the flush writes zeros, matching ref.py's masked softmax.
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P) int32;
+    lengths: (S,) int32 -> (S,H,D)."""
+    s_n, h, d = q.shape
+    _, page, kh, _ = k_pages.shape
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    p_n = block_table.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    q4 = q.reshape(s_n, kh, g, d)
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda s, k, p, bt, ln: (s, k, 0, 0))
+    kv_spec = pl.BlockSpec((1, page, 1, d),
+                           lambda s, k, p, bt, ln: (bt[s, p], 0, k, 0))
+    o_spec = pl.BlockSpec((1, 1, g, d), lambda s, k, p, bt, ln: (s, k, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_n, kh, p_n),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ])
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, page_size=page,
+                          n_page_blocks=p_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_n, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q4, k_pages, v_pages)
+    return out.reshape(s_n, h, d)

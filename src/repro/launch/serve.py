@@ -28,6 +28,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV + Pallas decode kernel + fused "
+                         "multi-token decode loop (PagedEngine)")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="tokens per host sync in the paged engine")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="KV page size for --paged (tokens per page)")
     ap.add_argument("--kv-style", default="full",
                     choices=["full", "gqa", "mqa"])
     ap.add_argument("--quant", default="bf16",
@@ -46,8 +53,15 @@ def main(argv=None):
         params = quantize_tree(params, quant=args.quant)
         print(f"[serve] weights quantized to {args.quant}")
 
-    eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
-                 seed=args.seed)
+    if args.paged:
+        from repro.serve.engine import PagedEngine
+        eng = PagedEngine(lm, params, n_slots=args.slots,
+                          max_len=args.max_len, seed=args.seed,
+                          page_size=args.page_size,
+                          decode_block=args.decode_block)
+    else:
+        eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
+                     seed=args.seed)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     ids = [eng.submit(rng.integers(0, cfg.vocab_size,
@@ -58,9 +72,11 @@ def main(argv=None):
     done = eng.run_to_completion()
     dt = time.perf_counter() - t0
     n_tok = sum(len(done[i].out_tokens) for i in ids)
+    mode = (f"paged, {eng.sync_count} host syncs" if args.paged
+            else "eager, 1 sync/token")
     print(f"[serve] {cfg.name}: {len(ids)} requests, {n_tok} tokens in "
           f"{dt:.1f}s ({n_tok/dt:.1f} tok/s, continuous batching over "
-          f"{args.slots} slots)")
+          f"{args.slots} slots, {mode})")
     for i in ids[:3]:
         print(f"  req {i}: {len(done[i].out_tokens)} tokens "
               f"{done[i].out_tokens[:8]}…")

@@ -103,6 +103,16 @@ def cache_shardings(cache_abs: Any, mesh: Mesh, cfg: ModelConfig,
     def leaf(path, l):
         ks = jax.tree_util.keystr(path)
         dims = [None] * l.ndim
+        if "pages" in ks:
+            # paged KV pools (decode_attn_impl="paged_pallas"): pages have
+            # no batch dim (slots share the pool), so never batch-shard;
+            # TP splits the stored kv-head dim over "model".
+            h_dim = l.ndim - 2
+            if model > 1 and l.shape[h_dim] % model == 0:
+                dims[h_dim] = "model"
+            return _ns(mesh, *dims)
+        if "block_table" in ks:
+            return _ns(mesh, *dims)           # tiny; replicate
         off = 1 if cfg.scan_layers else 0     # leading stacked group dim
         b_dim = off
         batch_sharded = False

@@ -1,10 +1,12 @@
 """Attention: MHA / MQA / GQA (one GQA impl with variable kv heads) + MLA.
 
-Three entry points per layer:
+Entry points per layer:
   * ``attention_forward``  — train / prefill (full sequence, causal or not)
-  • ``attention_decode``   — one-token step against a KV cache
-  * ``init_kv_cache``      — cache allocation (contiguous; paged lives in
-    ``repro.serve.paged``)
+  * ``attention_decode``   — one-token step against a contiguous KV cache
+  * ``attention_decode_paged`` — one-token step, all slots, against paged
+    KV pools via the Pallas flash-decoding kernel
+    (``kernels/paged_attention``; page bookkeeping in ``repro.serve.paged``)
+  * ``init_kv_cache`` / ``init_paged_kv_cache`` — cache allocation
 
 MLA (DeepSeek-V2 style) compresses KV into a latent ``c_kv`` plus a shared
 decoupled-RoPE key; decode uses the absorbed-matmul trick so the cache is
@@ -341,6 +343,23 @@ def init_kv_cache(batch: int, max_len: int, a: AttentionConfig, *,
     }
 
 
+def init_paged_kv_cache(n_slots: int, n_pages: int, pages_per_slot: int,
+                        a: AttentionConfig, *, page_size: int = 256,
+                        style: str = "full", dtype=jnp.bfloat16) -> dict:
+    """Paged cache for one attention layer: page pools shared by all slots
+    plus a per-slot block table (page 0 = null page, see serve/paged.py).
+    The block table is replicated into every layer's cache dict so the
+    decode step stays a pure function of (params, token, cache, pos)."""
+    if a.kind == "mla":
+        raise NotImplementedError("paged decode: standard attention only")
+    kvh = cache_kv_heads(a, style)
+    return {
+        "k_pages": jnp.zeros((n_pages, page_size, kvh, a.head_dim), dtype),
+        "v_pages": jnp.zeros((n_pages, page_size, kvh, a.head_dim), dtype),
+        "block_table": jnp.zeros((n_slots, pages_per_slot), jnp.int32),
+    }
+
+
 def cache_kv_heads(a: AttentionConfig, style: str) -> int:
     kvh = a.kv_heads_effective()
     if style == "mqa":
@@ -449,6 +468,47 @@ def attention_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
     o = o.reshape(b, 1, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o, a))
     return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
+                           cache: dict, pos: jax.Array, *,
+                           style: str = "full",
+                           use_kernel: bool = True) -> tuple[jax.Array, dict]:
+    """One-token decode against a paged KV cache, ALL slots in one kernel
+    launch (``decode_attn_impl == "paged_pallas"``).
+
+    x: (S,1,d); pos: (S,) per-slot lengths — position where this token's
+    K/V is written.  cache: {k_pages, v_pages, block_table} from
+    ``init_paged_kv_cache``.  Slots without allocated pages write to the
+    null page and read back zeros (their outputs are garbage; the engine
+    masks them).
+    """
+    from repro.kernels.paged_attention.ops import paged_attention
+    from repro.serve.paged import paged_write_batch
+    if a.window is not None:
+        raise NotImplementedError("paged decode: sliding window unsupported")
+    b, _, d = x.shape
+    kvh = a.kv_heads_effective()
+    kvh_store = cache["k_pages"].shape[2]
+    pos = _posv(pos, b)
+    posv = pos[:, None]
+
+    q = linear_apply(p["wq"], x).reshape(b, 1, a.heads_padded, a.head_dim)
+    k_new = linear_apply(p["wk"], x).reshape(b, 1, kvh, a.head_dim)
+    v_new = linear_apply(p["wv"], x).reshape(b, 1, kvh, a.head_dim)
+    q = apply_rope(q, posv, a.rope_theta)[:, 0]                # (S,H,D)
+    k_new = apply_rope(k_new, posv, a.rope_theta)
+    k_new = _merge_heads(k_new, kvh_store)[:, 0]               # (S,KH,D)
+    v_new = _merge_heads(v_new, kvh_store)[:, 0]
+
+    bt = cache["block_table"]
+    k_pages, v_pages = paged_write_batch(
+        cache["k_pages"], cache["v_pages"], bt, pos, k_new, v_new)
+    o = paged_attention(q, k_pages, v_pages, bt, pos + 1,
+                        use_kernel=use_kernel)                 # (S,H,D)
+    o = o.reshape(b, 1, a.heads_padded * a.head_dim)
+    y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
+    return y, {"k_pages": k_pages, "v_pages": v_pages, "block_table": bt}
 
 
 def attention_decode_cp(p: dict, x: jax.Array, a: AttentionConfig,

@@ -123,13 +123,30 @@ class LM:
     def init_cache(self, batch: int, max_len: int) -> dict:
         return init_stack_cache(self.cfg, batch, max_len)
 
-    def prefill(self, params, tokens, cache, *, modality_input=None):
-        """Full-context pass filling the cache; returns last-token logits."""
+    def init_paged_cache(self, n_slots: int, n_pages: int,
+                         pages_per_slot: int, *, page_size: int = 256) -> dict:
+        """Paged decode cache (decode_attn_impl="paged_pallas"): per-layer
+        page pools + block tables instead of (B, S, KH, D) slabs."""
+        return init_stack_cache(self.cfg, n_slots, 0, paged=True,
+                                n_pages=n_pages,
+                                pages_per_slot=pages_per_slot,
+                                page_size=page_size)
+
+    def prefill(self, params, tokens, cache, *, modality_input=None,
+                lengths=None):
+        """Full-context pass filling the cache; returns last-token logits.
+        ``lengths`` (B,) switches to ragged selection — logits are taken at
+        each row's position ``lengths[b]-1`` instead of the final column,
+        so right-padded batched admission gets real last-token logits."""
         x, cache, _ = self.backbone(params, tokens, mode="prefill",
                                     cache=cache,
                                     modality_input=modality_input,
                                     train=False)
-        last = x[:, -1:]
+        if lengths is None:
+            last = x[:, -1:]
+        else:
+            idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1).astype(jnp.int32)
+            last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = last.astype(jnp.float32) @ self._head_w(params).astype(
             jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), cache

@@ -74,17 +74,29 @@ def init_group(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
     return group
 
 
-def init_group_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    """KV caches / recurrent states for one group (decode & prefill)."""
+def init_group_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     paged: bool = False, n_pages: int = 0,
+                     pages_per_slot: int = 0, page_size: int = 256) -> dict:
+    """KV caches / recurrent states for one group (decode & prefill).
+    ``paged=True`` swaps each attention layer's contiguous (B, S, KH, D)
+    cache for page pools + a block table (decode_attn_impl="paged_pallas");
+    SSM states and cross-attention caches are position-free and unchanged."""
     kinds = block_kinds(cfg)
     cache = {}
+    kv_dtype = (jnp.bfloat16 if cfg.kv_cache_dtype == "bfloat16"
+                else jnp.int8)
     for i, bk in enumerate(kinds):
         c: Dict[str, Any] = {}
         if bk["kind"] == "attn":
-            c["kv"] = attn_mod.init_kv_cache(
-                batch, max_len, cfg.attention, style=cfg.kv_cache_style,
-                dtype=jnp.bfloat16 if cfg.kv_cache_dtype == "bfloat16"
-                else jnp.int8)
+            if paged:
+                c["kv"] = attn_mod.init_paged_kv_cache(
+                    batch, n_pages, pages_per_slot, cfg.attention,
+                    page_size=page_size, style=cfg.kv_cache_style,
+                    dtype=kv_dtype)
+            else:
+                c["kv"] = attn_mod.init_kv_cache(
+                    batch, max_len, cfg.attention, style=cfg.kv_cache_style,
+                    dtype=kv_dtype)
         elif bk["kind"] == "mamba":
             c["state"] = ssm_mod.init_mamba_state(batch, cfg.d_model, cfg.ssm)
         elif bk["kind"] == "rwkv6":
@@ -169,7 +181,12 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
             else:  # decode
                 from repro.sharding.ctx import current_mesh
                 mesh = current_mesh()
-                if (cfg.decode_attn_impl == "cp" and mesh is not None
+                if "k_pages" in c["kv"]:
+                    # paged cache present <=> decode_attn_impl="paged_pallas"
+                    y, kv = attn_mod.attention_decode_paged(
+                        blk["attn"], h, a, c["kv"], pos,
+                        style=cfg.kv_cache_style)
+                elif (cfg.decode_attn_impl == "cp" and mesh is not None
                         and a.kind != "mla"):
                     y, kv = attn_mod.attention_decode_cp(
                         blk["attn"], h, a, c["kv"], pos, mesh=mesh)
@@ -249,13 +266,15 @@ def init_stack(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
     return {f"g{i}": init_group(keys[i], cfg, dtype) for i in range(g)}
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     **paged_kw) -> dict:
     g = cfg.num_groups
-    one = init_group_cache(cfg, batch, max_len)
+    one = init_group_cache(cfg, batch, max_len, **paged_kw)
     if cfg.scan_layers:
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (g,) + x.shape), one)
-    return {f"g{i}": init_group_cache(cfg, batch, max_len) for i in range(g)}
+    return {f"g{i}": init_group_cache(cfg, batch, max_len, **paged_kw)
+            for i in range(g)}
 
 
 def stack_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,

@@ -69,7 +69,6 @@ def context_parallel_decode(q, k_cache, v_cache, pos, mesh: Mesh, *,
         l_g = jax.lax.psum(l_c, axis)
         o_g = jax.lax.psum(o_c, axis)
         o_final = o_g / jnp.maximum(l_g, 1e-30)[..., None]
-        kh = k_l.shape[2]
         return o_final.reshape(b, h, hd).astype(q_l.dtype)
 
     fn = shard_map(

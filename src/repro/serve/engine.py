@@ -1,24 +1,40 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engines.
 
 Slot-based (JetStream-style for TPU): a fixed decode batch of ``n_slots``;
-each incoming request is prefilled (batch-1) into a free slot's cache
-region, then all active slots decode in lock-step with one jitted
-``decode_step``.  Finished slots (EOS or max_new_tokens) free immediately
-and new requests join without draining the batch — that *is* continuous
-batching.
+each incoming request is prefilled into a free slot, then all active slots
+decode in lock-step.  Finished slots (EOS or max_new_tokens) free
+immediately and new requests join without draining the batch — that *is*
+continuous batching.
 
-Sampling: greedy or temperature (seeded per engine).
+Two engines share the Request/registry surface:
+
+``Engine`` — the eager baseline: contiguous per-slot cache regions,
+batch-1 prefill per admission, host-side sampling, and one device→host
+sync per generated token.
+
+``PagedEngine`` — the hot path (decode_attn_impl="paged_pallas"): KV lives
+in paged pools driven by the Pallas flash-decoding kernel
+(kernels/paged_attention); sampling happens on device (greedy +
+temperature via a per-step folded ``jax.random`` key); decode runs
+``decode_block`` tokens per dispatch inside one jitted ``lax.scan`` with
+per-slot EOS/budget masks, so the host syncs once per block instead of
+once per token (``sync_count`` audits this); and queued requests are
+admitted in ONE batched, length-bucketed prefill call instead of a Python
+loop of batch-1 launches.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.paged import (PAGE, OutOfPagesError, PageAllocator,
+                               scatter_prefill_cache, set_block_table_rows)
 
 
 @dataclasses.dataclass
@@ -36,35 +52,54 @@ class Request:
     t_done: Optional[float] = None
 
 
-class Engine:
-    def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
-                 eos_id: int = -1, seed: int = 0):
+class _EngineBase:
+    """Request intake + slot bookkeeping shared by both engines."""
+
+    def __init__(self, lm, params, *, n_slots: int, max_len: int,
+                 eos_id: int):
         self.lm = lm
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos = eos_id
-        self.rng = np.random.default_rng(seed)
-        self.cache = lm.init_cache(n_slots, max_len)
         self.free = deque(range(n_slots))
         self.active: Dict[int, Request] = {}     # slot -> req
         self.queue: deque[Request] = deque()
+        self.registry: Dict[int, Request] = {}   # rid -> req (all ever seen)
         self._next_rid = 0
+
+    def submit(self, prompt, **kw) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens >= max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      t_submit=time.perf_counter(), **kw)
+        self.queue.append(req)
+        self.registry[rid] = req
+        return rid
+
+    def step(self) -> List[tuple]:
+        raise NotImplementedError
+
+    def run_to_completion(self) -> Dict[int, Request]:
+        while self.queue or self.active:
+            self.step()
+        return dict(self.registry)
+
+
+class Engine(_EngineBase):
+    def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
+                 eos_id: int = -1, seed: int = 0):
+        super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
+                         eos_id=eos_id)
+        self.rng = np.random.default_rng(seed)
+        self.cache = lm.init_cache(n_slots, max_len)
 
         self._prefill_one = jax.jit(self._prefill_impl)
         self._decode = jax.jit(lm.decode_step)
-
-    # ------------------------------------------------------------------
-    def submit(self, prompt, **kw) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
-                      t_submit=time.perf_counter(), **kw)
-        self.queue.append(req)
-        if not hasattr(self, "registry"):
-            self.registry: Dict[int, Request] = {}
-        self.registry[rid] = req
-        return rid
 
     # ------------------------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, slot):
@@ -111,8 +146,14 @@ class Engine:
             req.out_tokens.append(tok)
             req.pos = plen
             req.t_first = time.perf_counter()
-            self.active[slot] = req
             emitted.append((req.rid, tok))
+            if (tok == self.eos or req.max_new_tokens <= 1
+                    or req.pos >= self.max_len - 1):
+                req.done = True           # EOS/budget hit on first token
+                req.t_done = req.t_first
+                self.free.append(slot)
+            else:
+                self.active[slot] = req
 
         if not self.active:
             return emitted
@@ -147,7 +188,223 @@ class Engine:
                 self.free.append(slot)
         return emitted
 
-    def run_to_completion(self) -> Dict[int, Request]:
-        while self.queue or self.active:
-            self.step()
-        return dict(getattr(self, "registry", {}))
+
+# ---------------------------------------------------------------------------
+# Paged engine
+
+
+def _sample_batch(logits: jax.Array, temps: jax.Array,
+                  key: jax.Array) -> jax.Array:
+    """Device-side sampling: greedy where temps<=0, else temperature
+    sampling via jax.random.categorical.  logits: (S,V); temps: (S,)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, logits / t, axis=-1).astype(
+        jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def _pow2_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class PagedEngine(_EngineBase):
+    """Continuous batching over a paged KV cache with a host-sync-free
+    inner loop (see module docstring).  Requires an attention-only
+    decoder (no MLA / SSM blocks / cross-attention / sliding window)."""
+
+    def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
+                 eos_id: int = -1, seed: int = 0, page_size: int = PAGE,
+                 decode_block: int = 8, n_pages: Optional[int] = None):
+        cfg = lm.cfg
+        a = cfg.attention
+        assert a is not None and a.kind != "mla" and a.window is None \
+            and cfg.encoder is None and cfg.cross_attn_every == 0 \
+            and all(k == "attn" for k in cfg.block_pattern), \
+            "PagedEngine needs an attention-only decoder"
+        if cfg.decode_attn_impl != "paged_pallas":
+            lm = type(lm)(cfg.with_(decode_attn_impl="paged_pallas"))
+        super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
+                         eos_id=eos_id)
+        self.page_size = page_size
+        self.decode_block = decode_block
+        pages_per_slot = (max_len + page_size - 1) // page_size
+        if n_pages is None:
+            n_pages = n_slots * pages_per_slot + 1   # +1: null page
+        self.alloc = PageAllocator(n_pages, pages_per_slot, n_slots)
+        self.cache = lm.init_paged_cache(n_slots, n_pages, pages_per_slot,
+                                         page_size=page_size)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.temps = np.zeros((n_slots,), np.float32)
+        self.remaining = np.zeros((n_slots,), np.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.key = jax.random.PRNGKey(seed)
+        self.sync_count = 0                      # device->host transitions
+        self.steps_dispatched = 0                # decode steps traced+run
+
+        # the old cache is dead the moment a dispatch returns — donate it
+        # so the page pools aren't double-resident (no-op on CPU)
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._admit_jit = jax.jit(self._admit_impl, donate_argnums=donate)
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    # device programs
+
+    def _admit_impl(self, params, cache, tokens, slot_ids, plens, temps,
+                    key):
+        """Batched admission: ONE padded prefill for every queued request
+        admitted this tick, scattered into the paged pools, first token
+        sampled on device.  tokens: (nb, plen_pad) right-padded."""
+        nb, t = tokens.shape
+        tmp = self.lm.init_cache(nb, t)
+        logits, tmp = self.lm.prefill(params, tokens, tmp, lengths=plens)
+        cache = scatter_prefill_cache(cache, tmp, slot_ids, plens)
+        tok = _sample_batch(logits, temps, key)
+        return tok, cache
+
+    def _decode_impl(self, params, cache, tokens, lengths, active,
+                     remaining, temps, key):
+        """``decode_block`` fused decode steps: sample on device, advance
+        per-slot lengths/budgets, mask finished slots.  Steps where no
+        slot is active are skipped via lax.cond (block overrun)."""
+        eos, max_len = self.eos, self.max_len
+
+        def real_step(carry):
+            tokens, lengths, active, remaining, cache, key = carry
+            logits, cache = self.lm.decode_step(params, tokens, cache,
+                                                lengths)
+            key, sub = jax.random.split(key)
+            nxt = _sample_batch(logits, temps, sub)
+            nxt = jnp.where(active, nxt, tokens)
+            lengths = jnp.where(active, lengths + 1, lengths)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            done = (nxt == eos) | (remaining <= 0) | (lengths >= max_len - 1)
+            active = active & ~done
+            return (nxt, lengths, active, remaining, cache, key)
+
+        def step(carry, _):
+            emit = carry[2]                      # active at step start
+            carry = jax.lax.cond(jnp.any(emit), real_step, lambda c: c,
+                                 carry)
+            return carry, (carry[0], emit)
+
+        carry = (tokens, lengths, active, remaining, cache, key)
+        carry, (toks, emits) = jax.lax.scan(step, carry, None,
+                                            length=self.decode_block)
+        tokens, lengths, active, remaining, cache, _ = carry
+        return cache, toks, emits, tokens, lengths, active, remaining
+
+    # ------------------------------------------------------------------
+    # host loop
+
+    def _retire(self, slot: int, now: float):
+        req = self.active.pop(slot)
+        req.done = True
+        req.t_done = now
+        self.alloc.release(slot)                 # zeroes the host bt row
+        self.lengths[slot] = 0
+        self.temps[slot] = 0.0
+        self.free.append(slot)
+        # point the device row at the null page so the retired slot's
+        # lock-step garbage writes can't land in reallocated pages
+        self.cache = set_block_table_rows(
+            self.cache, np.asarray([slot]), self.alloc.table[[slot]])
+
+    def _try_admit(self) -> List[Request]:
+        """Pop queue entries into free slots while pages last."""
+        admitted = []
+        while self.queue and self.free:
+            req = self.queue[0]
+            plen = len(req.prompt)
+            horizon = min(plen + req.max_new_tokens, self.max_len)
+            slot = self.free[0]
+            try:
+                self.alloc.alloc(slot, self.alloc.pages_needed(
+                    horizon, self.page_size))
+            except OutOfPagesError:
+                if not self.active and not admitted:
+                    raise            # nothing will ever free these pages
+                break                # decode on; retirements free pages
+            self.queue.popleft()
+            self.free.popleft()
+            req.slot = slot
+            admitted.append(req)
+        return admitted
+
+    def _dispatch_admit(self, admitted: List[Request], emitted: list):
+        plens = np.asarray([len(r.prompt) for r in admitted], np.int32)
+        slot_ids = np.asarray([r.slot for r in admitted], np.int32)
+        plen_pad = _pow2_bucket(int(plens.max()))
+        tokens = np.zeros((len(admitted), plen_pad), np.int32)
+        for i, r in enumerate(admitted):
+            tokens[i, :plens[i]] = r.prompt
+            self.temps[r.slot] = r.temperature
+        self.cache = set_block_table_rows(self.cache, slot_ids,
+                                          self.alloc.table[slot_ids])
+        self.key, sub = jax.random.split(self.key)
+        tok0, self.cache = self._admit_jit(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(slot_ids), jnp.asarray(plens),
+            jnp.asarray(self.temps[slot_ids]), sub)
+        tok0 = np.asarray(tok0)                  # <- sync (1 per admit batch)
+        self.sync_count += 1
+        now = time.perf_counter()
+        for i, req in enumerate(admitted):
+            t = int(tok0[i])
+            req.out_tokens.append(t)
+            req.pos = int(plens[i])
+            req.t_first = now
+            self.active[req.slot] = req
+            self.lengths[req.slot] = plens[i]
+            self.remaining[req.slot] = req.max_new_tokens - 1
+            self.last_tok[req.slot] = t
+            emitted.append((req.rid, t))
+            if (t == self.eos or req.max_new_tokens <= 1
+                    or req.pos >= self.max_len - 1):
+                self._retire(req.slot, now)
+
+    def _dispatch_decode(self, emitted: list):
+        active_mask = np.zeros((self.n_slots,), bool)
+        for slot in self.active:
+            active_mask[slot] = True
+        self.key, sub = jax.random.split(self.key)
+        out = self._decode_jit(
+            self.params, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.lengths), jnp.asarray(active_mask),
+            jnp.asarray(self.remaining), jnp.asarray(self.temps), sub)
+        self.cache = out[0]
+        # ONE sync for the whole K-token block (writable host copies):
+        toks, emits, last, lengths, active, remaining = (
+            np.array(x) for x in out[1:])
+        self.sync_count += 1
+        self.steps_dispatched += self.decode_block
+        now = time.perf_counter()
+        for i in range(self.decode_block):
+            for slot in list(self.active):
+                if emits[i, slot]:
+                    req = self.active[slot]
+                    req.out_tokens.append(int(toks[i, slot]))
+                    req.pos += 1
+                    emitted.append((req.rid, int(toks[i, slot])))
+        self.last_tok, self.lengths, self.remaining = (last, lengths,
+                                                       remaining)
+        for slot in list(self.active):
+            if not active[slot]:
+                self._retire(slot, now)
+
+    def step(self) -> List[tuple]:
+        """One engine tick: batched admission (if anything is queued),
+        then one fused ``decode_block``-token decode dispatch.  Returns
+        [(rid, token), ...] emitted this tick."""
+        emitted: List[tuple] = []
+        if self.queue and self.free:
+            admitted = self._try_admit()
+            if admitted:
+                self._dispatch_admit(admitted, emitted)
+        if self.active:
+            self._dispatch_decode(emitted)
+        return emitted

@@ -2,59 +2,218 @@
 
 vLLM pages are 16-token and pointer-chased per token — efficient on GPUs
 with per-thread gathers, hostile to TPU's vector memory system.  The TPU
-adaptation (DESIGN.md §3): 256-token pages (lane-aligned), a per-slot block
-table, and page gathers via ``jnp.take`` along the page axis — one gather
-per decode step instead of per token.
+adaptation (DESIGN.md §3): large lane-aligned pages (256-token default), a
+per-slot block table, and — since this PR — a Pallas flash-decoding kernel
+(``kernels/paged_attention``) whose BlockSpec index maps stream pages
+straight from HBM, one (page, head_dim) tile per grid step, for ALL active
+slots in one launch.  The legacy ``paged_attention`` below (one slot,
+``jnp.take`` gather into a contiguous copy) is kept as a readable baseline.
+
+Page 0 is the NULL page: free slots' block-table rows point at it, and
+masked writes (padding tokens, retired slots) are routed into it, so device
+code never needs a branch for "no page allocated here".
 
 Equivalence with contiguous caches is property-tested in
 tests/test_serving.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PAGE = 256
 
 
+class OutOfPagesError(RuntimeError):
+    """Raised when an allocation cannot be satisfied by the free list."""
+
+
+class PageAllocator:
+    """Host-side page accounting: a free list + a host block table.
+
+    Device arrays (the page pools, the device block table inside the
+    engine cache) are owned elsewhere; this class only decides WHICH
+    physical pages a slot owns.  Page 0 is reserved as the null page.
+    """
+
+    def __init__(self, n_pages: int, max_pages_per_slot: int, n_slots: int):
+        self.n_pages = n_pages
+        self.max_pages_per_slot = max_pages_per_slot
+        self.free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.table = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self._owned: Dict[int, List[int]] = {}
+
+    def pages_needed(self, seq_len: int, page_size: int = PAGE) -> int:
+        return (seq_len + page_size - 1) // page_size
+
+    def alloc(self, slot: int, need: int) -> List[int]:
+        """Reserve ``need`` pages for ``slot``.  Atomic: on failure the
+        free list is left exactly as it was and OutOfPagesError raised."""
+        if self._owned.get(slot):
+            raise OutOfPagesError(f"slot {slot} already holds pages")
+        if need > self.max_pages_per_slot:
+            raise OutOfPagesError(
+                f"need {need} pages > {self.max_pages_per_slot} per slot")
+        pages: List[int] = []
+        try:
+            for _ in range(need):
+                pages.append(self.free.pop())
+        except IndexError:
+            self.free.extend(reversed(pages))       # roll back partial pops
+            raise OutOfPagesError(
+                f"need {need} pages, {len(self.free)} free") from None
+        self.table[slot, :] = 0
+        self.table[slot, :need] = pages
+        self._owned[slot] = pages
+        return pages
+
+    def release(self, slot: int) -> None:
+        self.free.extend(self._owned.pop(slot, []))
+        self.table[slot, :] = 0
+
+
 class PagedKVPool:
-    """Host-side allocator; device arrays are functional (returned anew)."""
+    """Single-layer paged K/V pool (allocator + device page arrays).
+
+    The serving engine holds per-layer pools inside the model cache and
+    uses :class:`PageAllocator` directly; this class is the self-contained
+    unit the kernel tests and examples drive.
+    """
 
     def __init__(self, n_pages: int, kv_heads: int, head_dim: int,
                  max_pages_per_slot: int, n_slots: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, page_size: int = PAGE):
         self.n_pages = n_pages
         self.kv_heads = kv_heads
         self.head_dim = head_dim
         self.dtype = dtype
-        self.free = list(range(n_pages - 1, 0, -1))  # page 0 = null page
-        self.block_table = jnp.zeros((n_slots, max_pages_per_slot), jnp.int32)
-        self.k_pages = jnp.zeros((n_pages, PAGE, kv_heads, head_dim), dtype)
-        self.v_pages = jnp.zeros((n_pages, PAGE, kv_heads, head_dim), dtype)
+        self.page_size = page_size
+        self.allocator = PageAllocator(n_pages, max_pages_per_slot, n_slots)
+        self.k_pages = jnp.zeros((n_pages, page_size, kv_heads, head_dim),
+                                 dtype)
+        self.v_pages = jnp.zeros((n_pages, page_size, kv_heads, head_dim),
+                                 dtype)
 
-    def alloc(self, slot: int, seq_len: int):
-        """Reserve pages for slot; returns updated block table."""
-        need = (seq_len + PAGE - 1) // PAGE
-        pages = [self.free.pop() for _ in range(need)]
-        bt = self.block_table
-        for i, p in enumerate(pages):
-            bt = bt.at[slot, i].set(p)
-        self.block_table = bt
-        return pages
+    @property
+    def free(self) -> List[int]:
+        return self.allocator.free
 
-    def release(self, slot: int):
-        used = [int(p) for p in self.block_table[slot] if int(p) != 0]
-        self.free.extend(used)
-        self.block_table = self.block_table.at[slot].set(0)
+    @property
+    def block_table(self) -> jax.Array:
+        return jnp.asarray(self.allocator.table)
+
+    def alloc(self, slot: int, seq_len: int) -> List[int]:
+        """Reserve pages covering ``seq_len`` tokens for ``slot``.
+        Raises :class:`OutOfPagesError` (free list unchanged) when the
+        pool cannot satisfy the request."""
+        need = self.allocator.pages_needed(seq_len, self.page_size)
+        return self.allocator.alloc(slot, need)
+
+    def release(self, slot: int) -> None:
+        self.allocator.release(slot)
+
+
+# ---------------------------------------------------------------------------
+# Device-side page ops (jit-traceable, batched over slots)
+
+
+def paged_write_batch(k_pages, v_pages, block_table, positions,
+                      k_new, v_new):
+    """Write one token per slot: k_new/v_new (S, KVH, D) land at logical
+    position ``positions[s]`` of each slot's pages.  Slots whose row in
+    the block table is unallocated resolve to the null page (their writes
+    collide there harmlessly)."""
+    page = k_pages.shape[1]
+    s_n = positions.shape[0]
+    pidx = block_table[jnp.arange(s_n), positions // page]       # (S,)
+    off = positions % page
+    k_pages = k_pages.at[pidx, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[pidx, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_scatter_prefill(k_pages, v_pages, block_table, slot_ids, lengths,
+                          k_rows, v_rows):
+    """Scatter a batched prefill's contiguous K/V into pages.
+
+    k_rows/v_rows: (B, T, KVH, D) — row b's tokens [0, lengths[b]) go to
+    slot ``slot_ids[b]``'s pages; padding tokens (and rows with length 0)
+    are routed to the null page.  One scatter per array, no host loop.
+    """
+    b, t = k_rows.shape[:2]
+    page = k_pages.shape[1]
+    tpos = jnp.arange(t)[None, :]                                # (1,T)
+    valid = tpos < lengths[:, None]                              # (B,T)
+    pidx = block_table[slot_ids[:, None], tpos // page]          # (B,T)
+    pidx = jnp.where(valid, pidx, 0)
+    off = jnp.broadcast_to(tpos % page, (b, t))
+    k_pages = k_pages.at[pidx, off].set(k_rows.astype(k_pages.dtype))
+    v_pages = v_pages.at[pidx, off].set(v_rows.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths):
+    """Scatter a whole model's batched-prefill cache into the paged cache.
+
+    Walks the two cache pytrees in parallel; every paged attention node
+    ({k_pages, v_pages, block_table}) receives the matching contiguous
+    node's ({k, v}) rows via :func:`paged_scatter_prefill` (vmapped over
+    the stacked-groups axis when cfg.scan_layers).  Position-free state
+    nodes (SSM, cross-attn) are not supported — the paged engine gates on
+    attention-only models.
+    """
+    if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
+        kp, vp, bt = (paged_cache["k_pages"], paged_cache["v_pages"],
+                      paged_cache["block_table"])
+        if kp.ndim == 5:                       # (G, N, page, KH, D) stacked
+            kp, vp = jax.vmap(
+                paged_scatter_prefill,
+                in_axes=(0, 0, 0, None, None, 0, 0))(
+                kp, vp, bt, slot_ids, lengths,
+                contig_cache["k"], contig_cache["v"])
+        else:
+            kp, vp = paged_scatter_prefill(
+                kp, vp, bt, slot_ids, lengths,
+                contig_cache["k"], contig_cache["v"])
+        return {"k_pages": kp, "v_pages": vp, "block_table": bt}
+    if isinstance(paged_cache, dict):
+        return {k: scatter_prefill_cache(paged_cache[k], contig_cache[k],
+                                         slot_ids, lengths)
+                for k in paged_cache}
+    raise NotImplementedError(
+        f"paged engine: unsupported cache leaf {type(paged_cache)}")
+
+
+def set_block_table_rows(cache, slots, rows):
+    """Push host block-table rows into every layer's device block table.
+    slots: (n,) slot indices; rows: (n, pages_per_slot) int32."""
+    slots = jnp.asarray(slots, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def leaf(path, l):
+        if "block_table" not in jax.tree_util.keystr(path):
+            return l
+        if l.ndim == 3:                        # (G, S, P) stacked groups
+            return l.at[:, slots, :].set(rows[None])
+        return l.at[slots].set(rows)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-slot path (readable baseline; the engine hot path is the
+# Pallas kernel in kernels/paged_attention)
 
 
 def paged_write(k_pages, v_pages, block_table, slot, pos, k_new, v_new):
     """Write one token's K/V at logical position ``pos`` of ``slot``.
     k_new/v_new: (kvh, hd)."""
-    page_idx = block_table[slot, pos // PAGE]
-    off = pos % PAGE
+    page = k_pages.shape[1]
+    page_idx = block_table[slot, pos // page]
+    off = pos % page
     k_pages = jax.lax.dynamic_update_slice(
         k_pages, k_new[None, None].astype(k_pages.dtype), (page_idx, off, 0, 0))
     v_pages = jax.lax.dynamic_update_slice(
@@ -67,19 +226,19 @@ def paged_attention(q, k_pages, v_pages, block_table, slot, length,
     """Decode attention for one slot against its paged KV.
 
     q: (H, hd).  Gathers the slot's pages (one take), then standard
-    masked attention over the gathered (max_pages·PAGE) context.
+    masked attention over the gathered (max_pages·page) context.
     """
     bt = block_table[slot]                              # (max_pages,)
-    k = jnp.take(k_pages, bt, axis=0)                   # (P, PAGE, kvh, hd)
+    k = jnp.take(k_pages, bt, axis=0)                   # (P, page, kvh, hd)
     v = jnp.take(v_pages, bt, axis=0)
-    p, _, kvh, hd = k.shape
-    k = k.reshape(p * PAGE, kvh, hd)
-    v = v.reshape(p * PAGE, kvh, hd)
+    p, page, kvh, hd = k.shape
+    k = k.reshape(p * page, kvh, hd)
+    v = v.reshape(p * page, kvh, hd)
     g = num_heads // kvh
     qg = q.reshape(kvh, g, hd)
     scores = jnp.einsum("kgd,tkd->kgt", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / (hd ** 0.5)
-    valid = jnp.arange(p * PAGE) < length
+    valid = jnp.arange(p * page) < length
     scores = jnp.where(valid[None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("kgt,tkd->kgd", probs, v.astype(jnp.float32))
