@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         [--arch qwen2-1.5b] [--requests 16] [--slots 4] [--max-new 32] \
-        [--decode-block 8] [--page-size 64] [--out PATH]
+        [--decode-block 8] [--page-size 64] [--kv-dtype int8] [--out PATH]
 
 Drives both engines over the same synthetic request trace and writes a
 JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``)
@@ -11,10 +11,17 @@ inter-token time), plus the paged engine's host-sync counter — the number
 the fused decode loop exists to shrink (one device->host transition per
 ``decode_block`` tokens instead of one per token).
 
+``--kv-dtype`` runs the paged engine on a quantized (int8/fp8) KV cache
+(repro.kvcache: per-page amax scales, fused-dequant kernel).  The
+``kv_cache`` section of the artifact reports, for EVERY cache dtype at
+this run's slots/context: the allocated KV-pool bytes, stored
+bytes/token, and how many slots of ``max_len`` context fit per GiB of
+pool — the ~2× serving-capacity headline of int8 KV at fixed HBM.
+
 Runs on CPU (smoke config; the Pallas kernel in interpret mode) so the
 artifact lands in every environment; on TPU the same script measures the
-compiled kernel.  Absolute numbers are tier-relative — the tracked claim
-is the paged/eager ratio and the sync count.
+compiled kernel.  Absolute numbers are tier-relative — the tracked claims
+are the paged/eager ratio, the sync count, and the per-dtype KV bytes.
 """
 from __future__ import annotations
 
@@ -68,6 +75,38 @@ def run_engine(eng, prompts, max_new, temperature):
     return row
 
 
+def kv_cache_report(cfg, *, slots, max_len, page_size):
+    """Per-dtype KV-pool accounting at equal slots/context: allocated
+    pool bytes (pages + scales, null page included), stored bytes/token,
+    and max slots of ``max_len`` context admissible per GiB of pool."""
+    from repro.kvcache import (kv_bytes_per_token, paged_pool_shape,
+                               pool_bytes)
+    from repro.models.model import LM
+
+    pps, n_pages = paged_pool_shape(slots, max_len, page_size)
+    out = {}
+    for dt in ("bf16", "int8", "fp8"):
+        lm_dt = LM(cfg.with_(kv_cache_dtype="bfloat16" if dt == "bf16"
+                             else dt))
+        cache_abs = jax.eval_shape(
+            lambda lm_=lm_dt: lm_.init_paged_cache(slots, n_pages, pps,
+                                                   page_size=page_size))
+        pb = pool_bytes(cache_abs)
+        tok_b = kv_bytes_per_token(lm_dt.cfg, layout="paged",
+                                   page_size=page_size)
+        slot_b = tok_b * max_len                 # one slot at full context
+        out[dt] = {
+            "pool_bytes": pb,
+            "pool_mib": round(pb / 2**20, 3),
+            "bytes_per_token": round(tok_b, 2),
+            "max_slots_per_gib": int(2**30 // max(slot_b, 1.0)),
+        }
+    for dt in ("int8", "fp8"):
+        out[dt]["pool_bytes_vs_bf16"] = round(
+            out["bf16"]["pool_bytes"] / out[dt]["pool_bytes"], 3)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -78,6 +117,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--decode-block", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=32)
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "bfloat16", "int8", "fp8"],
+                    help="KV-cache dtype for the paged engine run")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-eager", action="store_true")
@@ -85,6 +127,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.configs import get_smoke_config
+    from repro.kvcache import normalize_dtype
     from repro.models.model import LM
     from repro.serve.engine import Engine, PagedEngine
 
@@ -97,6 +140,7 @@ def main(argv=None):
                             ).tolist()
                for _ in range(args.requests)]
 
+    kv_dtype = normalize_dtype(args.kv_dtype)
     results = {
         "arch": cfg.name,
         "backend": jax.default_backend(),
@@ -104,6 +148,10 @@ def main(argv=None):
         "max_new": args.max_new,
         "decode_block": args.decode_block,
         "page_size": args.page_size,
+        "kv_dtype": kv_dtype,
+        "kv_cache": kv_cache_report(cfg, slots=args.slots,
+                                    max_len=args.max_len,
+                                    page_size=args.page_size),
     }
     if not args.skip_eager:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
@@ -113,16 +161,24 @@ def main(argv=None):
         print(f"[bench] eager : {results['eager']['tokens_per_sec']:8.1f} "
               f"tok/s  ttft p50 {results['eager']['ttft_ms']['p50']} ms  "
               f"syncs {results['eager']['host_syncs']}")
-    peng = PagedEngine(lm, params, n_slots=args.slots, max_len=args.max_len,
-                       seed=args.seed, page_size=args.page_size,
+    lm_paged = (lm if kv_dtype == "bfloat16"
+                else LM(cfg.with_(kv_cache_dtype=kv_dtype)))
+    peng = PagedEngine(lm_paged, params, n_slots=args.slots,
+                       max_len=args.max_len, seed=args.seed,
+                       page_size=args.page_size,
                        decode_block=args.decode_block)
     results["paged_pallas"] = run_engine(peng, prompts, args.max_new,
                                          args.temperature)
+    results["paged_pallas"]["kv_dtype"] = kv_dtype
+    kvrep = results["kv_cache"]["bf16" if kv_dtype == "bfloat16"
+                                else kv_dtype]
     print(f"[bench] paged : "
           f"{results['paged_pallas']['tokens_per_sec']:8.1f} tok/s  "
           f"ttft p50 {results['paged_pallas']['ttft_ms']['p50']} ms  "
           f"syncs {results['paged_pallas']['host_syncs']} "
-          f"({results['paged_pallas']['tokens_per_sync']:.1f} tok/sync)")
+          f"({results['paged_pallas']['tokens_per_sync']:.1f} tok/sync)  "
+          f"kv {kv_dtype} pool {kvrep['pool_mib']} MiB "
+          f"({kvrep['max_slots_per_gib']} slots/GiB)")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=1))

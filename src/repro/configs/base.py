@@ -169,7 +169,7 @@ class ModelConfig:
     # serve/engine.PagedEngine with on-device sampling and a fused
     # multi-token decode loop)
     decode_attn_impl: str = "eager"
-    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 | fp8 (repro.kvcache)
     kv_cache_style: str = "full"      # full | gqa | mqa (AE-LLM c_inf arm)
     quant: str = "bf16"               # bf16 | fp8 | int8 | int4  (weights)
     quant_method: str = "none"        # none | gptq | awq | smoothquant

@@ -47,12 +47,12 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 def abstract_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int):
     """Paged decode cache sized to hold ``max_len`` tokens per slot
-    (decode_attn_impl="paged_pallas"); page count = slots × pages/slot
-    + the null page."""
+    (decode_attn_impl="paged_pallas"); sizing shared with the engine via
+    ``repro.kvcache.paged_pool_shape``."""
+    from repro.kvcache import paged_pool_shape
     from repro.serve.paged import PAGE
     lm = LM(cfg)
-    pps = -(-max_len // PAGE)
-    n_pages = n_slots * pps + 1
+    pps, n_pages = paged_pool_shape(n_slots, max_len, PAGE)
     return jax.eval_shape(
         lambda: lm.init_paged_cache(n_slots, n_pages, pps, page_size=PAGE))
 

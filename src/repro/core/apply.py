@@ -66,8 +66,8 @@ def apply_efficiency_config(cfg: ModelConfig,
                       else "none"),
         kv_cache_style=eff.inf.kv_style if out.attention is not None
         else "full",
-        kv_cache_dtype="int8" if eff.inf.quant in ("int8", "int4")
-        else "bfloat16",
+        kv_cache_dtype={"int8": "int8", "int4": "int8",
+                        "fp8": "fp8"}.get(eff.inf.quant, "bfloat16"),
     )
     return out
 

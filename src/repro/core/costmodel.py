@@ -59,17 +59,14 @@ def _active_weight_bytes(cfg: ModelConfig) -> float:
 
 
 def _kv_bytes_per_token(cfg: ModelConfig) -> float:
-    a = cfg.attention
-    if a is None or "attn" not in cfg.block_pattern:
-        return 0.0
-    n_attn = sum(1 for b in cfg.block_pattern if b == "attn") \
-        * cfg.num_groups
-    elem = 1.0 if cfg.kv_cache_dtype == "int8" else 2.0
-    if a.kind == "mla":
-        return n_attn * (a.kv_lora_rank + a.rope_head_dim) * elem
-    from repro.models.attention import cache_kv_heads
-    kvh = cache_kv_heads(a, cfg.kv_cache_style)
-    return n_attn * 2 * kvh * a.head_dim * elem
+    """Real stored bytes/token from the kvcache spec — per-dtype element
+    sizes (bf16: 2, int8/fp8: 1) plus the fp32 scale tensors a quantized
+    cache carries, per layout (the paged layout amortizes scales over the
+    page)."""
+    from repro.kvcache import kv_bytes_per_token
+    layout = ("paged" if cfg.decode_attn_impl == "paged_pallas"
+              else "contiguous")
+    return kv_bytes_per_token(cfg, layout=layout)
 
 
 def _flops_per_token(cfg: ModelConfig, ctx_len: int) -> float:

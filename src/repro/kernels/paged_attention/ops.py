@@ -1,5 +1,13 @@
-"""Public op: paged decode attention with kernel/oracle dispatch."""
+"""Public op: paged decode attention with kernel/oracle dispatch.
+
+bf16/fp32 pools run the plain kernel; int8/fp8 pools (with their
+per-page-per-kv-head scales from ``repro.kvcache``) run the fused-dequant
+variant.  Off-TPU the kernel runs in interpret mode, so the engine tests
+cover the exact artifact that runs on TPU.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -10,13 +18,18 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    k_scales: Optional[jax.Array] = None,
+                    v_scales: Optional[jax.Array] = None, *,
                     use_kernel: bool = True) -> jax.Array:
     """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P);
-    lengths: (S,) -> (S,H,D)."""
+    lengths: (S,); k_scales/v_scales: (N,KH) fp32 for quantized pools
+    -> (S,H,D)."""
     if use_kernel:
         from repro.kernels.paged_attention.paged_attention import (
             paged_attention_pallas)
         return paged_attention_pallas(q, k_pages, v_pages, block_table,
-                                      lengths, interpret=not _on_tpu())
-    return paged_attention_ref(q, k_pages, v_pages, block_table, lengths)
+                                      lengths, k_scales, v_scales,
+                                      interpret=not _on_tpu())
+    return paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                               k_scales, v_scales)

@@ -5,8 +5,14 @@ the memory traffic the Pallas kernel avoids — and runs a masked fp32
 softmax.  Fully-masked slots (length 0, i.e. a free engine slot) return
 zeros, matching the kernel's "no live page ever touched" behaviour; a
 plain ``jax.nn.softmax`` would return a uniform distribution there.
+
+Quantized pools (int8 / fp8, ``repro.kvcache``) pass per-page-per-kv-head
+fp32 amax scales; the oracle dequantizes the gathered pages up front —
+the readable counterpart of the kernel's fused dequant.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,25 +21,31 @@ NEG_INF = -1e30
 
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                        block_table: jax.Array,
-                        lengths: jax.Array) -> jax.Array:
+                        block_table: jax.Array, lengths: jax.Array,
+                        k_scales: Optional[jax.Array] = None,
+                        v_scales: Optional[jax.Array] = None) -> jax.Array:
     """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P) int32;
-    lengths: (S,) int32 — keys at kpos < lengths[s] are live -> (S,H,D)."""
+    lengths: (S,) int32 — keys at kpos < lengths[s] are live;
+    k_scales/v_scales: (N,KH) fp32 for quantized pools -> (S,H,D)."""
     s_n, h, d = q.shape
     _, page, kh, _ = k_pages.shape
     p_n = block_table.shape[1]
     g = h // kh
-    k = k_pages[block_table].reshape(s_n, p_n * page, kh, d)   # (S,T,KH,D)
-    v = v_pages[block_table].reshape(s_n, p_n * page, kh, d)
+    k = k_pages[block_table].astype(jnp.float32)         # (S,P,page,KH,D)
+    v = v_pages[block_table].astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[block_table][:, :, None, :, None]
+        v = v * v_scales[block_table][:, :, None, :, None]
+    k = k.reshape(s_n, p_n * page, kh, d)                # (S,T,KH,D)
+    v = v.reshape(s_n, p_n * page, kh, d)
     qg = q.reshape(s_n, kh, g, d)
     scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
     scores = jnp.einsum("skgd,stkd->skgt", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
+                        k) * scale
     valid = jnp.arange(p_n * page)[None, :] < lengths[:, None]  # (S,T)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     m = jnp.max(scores, axis=-1, keepdims=True)
     p = jnp.exp(scores - m) * valid[:, None, None, :]
     l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("skgt,stkd->skgd", p / jnp.maximum(l, 1e-30),
-                   v.astype(jnp.float32))
+    o = jnp.einsum("skgt,stkd->skgd", p / jnp.maximum(l, 1e-30), v)
     return o.reshape(s_n, h, d).astype(q.dtype)

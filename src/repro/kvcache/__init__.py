@@ -1,0 +1,25 @@
+"""Unified KV-cache subsystem (layout × dtype × style).
+
+``CacheSpec`` names the combination; ``cache.py`` owns allocation /
+quantized writes / views for both contiguous and paged layouts.  The
+fused-dequant decode kernels live in ``kernels/paged_attention`` and
+consume the views exposed here.
+"""
+from repro.kvcache.cache import (alloc_contiguous, alloc_paged, decode_write,
+                                 kv_views, paged_scatter_prefill,
+                                 paged_views, paged_write_batch, pool_bytes,
+                                 prefill_write)
+from repro.kvcache.quant import (dequantize, quantize, quantize_with_scale,
+                                 requantize)
+from repro.kvcache.spec import (ELEM_BYTES, FP8, QMAX, CacheSpec,
+                                cache_kv_heads, kv_bytes_per_token,
+                                normalize_dtype, paged_pool_shape)
+
+__all__ = [
+    "CacheSpec", "cache_kv_heads", "kv_bytes_per_token", "normalize_dtype",
+    "paged_pool_shape", "ELEM_BYTES", "FP8", "QMAX",
+    "alloc_contiguous", "alloc_paged", "prefill_write", "decode_write",
+    "kv_views", "paged_views", "paged_write_batch", "paged_scatter_prefill",
+    "pool_bytes",
+    "quantize", "quantize_with_scale", "dequantize", "requantize",
+]

@@ -1,0 +1,76 @@
+"""KV quantize / dequantize primitives (symmetric amax scaling).
+
+A K/V vector group is quantized per stored kv head: ``scale =
+amax/QMAX`` over the head_dim axis (and whatever batch/position axes
+the scale tensor spans), values stored as ``round(x/scale)`` int8 or
+``(x/scale)`` fp8-e4m3.  Dequant is ``q·scale``; attention paths fold
+the scale into the score/probs contractions instead of materializing a
+dequantized copy (models/attention.py, kernels/paged_attention).
+
+The old ``.astype(int8)`` write this replaces truncated bf16 values in
+[-1, 1] to 0 — the scale tensors are what make the c_inf
+``kv_cache_dtype`` arm actually mean something.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.spec import FP8, QMAX
+
+
+def _qmax_of(dtype) -> float:
+    return QMAX["int8"] if jnp.dtype(dtype) == jnp.int8 else QMAX["fp8"]
+
+
+def quantize(x: jax.Array, store_dtype, *, axis: int = -1):
+    """Quantize ``x`` along ``axis`` (the head_dim axis).
+
+    Returns ``(q, scale)`` with ``q.shape == x.shape`` in
+    ``store_dtype`` and ``scale`` fp32 with ``axis`` reduced away.
+    Zero vectors get scale 0 and quantize to 0 (dequant is exact).
+    """
+    qmax = _qmax_of(store_dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = amax / qmax
+    safe = jnp.maximum(scale, 1e-30)
+    scaled = xf / jnp.expand_dims(safe, axis)
+    if jnp.dtype(store_dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = scaled.astype(FP8)
+    return q, scale
+
+
+def quantize_with_scale(x: jax.Array, scale: jax.Array, store_dtype, *,
+                        axis: int = -1):
+    """Quantize against an externally-chosen scale (paged writes: the
+    page's running amax scale, which may exceed this vector's own)."""
+    qmax = _qmax_of(store_dtype)
+    safe = jnp.maximum(scale, 1e-30)
+    scaled = x.astype(jnp.float32) / jnp.expand_dims(safe, axis)
+    if jnp.dtype(store_dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(scaled, -qmax, qmax).astype(FP8)
+    return q
+
+
+def dequantize(q: jax.Array, scale: jax.Array, *, axis: int = -1,
+               dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale, axis)).astype(dtype)
+
+
+def requantize(q: jax.Array, old_scale: jax.Array, new_scale: jax.Array, *,
+               axis: int = -1) -> jax.Array:
+    """Re-express stored values under a grown scale (paged running-amax
+    writes).  ``factor = old/new ≤ 1`` so int8 never re-clips; pages with
+    old scale 0 (fresh or reset) zero out — their contents were garbage."""
+    factor = jnp.where(new_scale > 0,
+                       old_scale / jnp.maximum(new_scale, 1e-30), 0.0)
+    f = jnp.expand_dims(factor, axis)
+    if q.dtype == jnp.int8:
+        return jnp.round(q.astype(jnp.float32) * f).astype(jnp.int8)
+    return (q.astype(jnp.float32) * f).astype(q.dtype)

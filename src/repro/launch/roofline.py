@@ -138,9 +138,19 @@ class RooflineTerms:
         return min(1.0, (self.useful_ratio * self.t_compute) / self.t_max)
 
 
+def resolve_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` returned ``[dict]`` per device
+    historically and a plain dict under current JAX — resolve either
+    shape (shared by the dry-run and the sharding tests)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def roofline_from_compiled(compiled, *, n_chips: int, model_flops: float,
                            hw: dict = HW) -> RooflineTerms:
-    ca = compiled.cost_analysis() or {}
+    ca = resolve_cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     hbm_bytes = float(ca.get("bytes accessed", 0.0))
     stats = parse_collectives(compiled.as_text())

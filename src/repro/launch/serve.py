@@ -37,15 +37,22 @@ def main(argv=None):
                     help="KV page size for --paged (tokens per page)")
     ap.add_argument("--kv-style", default="full",
                     choices=["full", "gqa", "mqa"])
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "bfloat16", "int8", "fp8"],
+                    help="KV-cache storage dtype (repro.kvcache): int8/fp8 "
+                         "caches carry amax scales and halve KV HBM")
     ap.add_argument("--quant", default="bf16",
                     choices=["bf16", "fp8", "int8", "int4"])
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.kvcache import normalize_dtype
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.with_(kv_cache_style=args.kv_style
-                    if cfg.attention is not None else "full")
+                    if cfg.attention is not None else "full",
+                    kv_cache_dtype=normalize_dtype(args.kv_dtype)
+                    if cfg.attention is not None else "bfloat16")
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     if args.quant != "bf16":

@@ -103,6 +103,12 @@ def cache_shardings(cache_abs: Any, mesh: Mesh, cfg: ModelConfig,
     def leaf(path, l):
         ks = jax.tree_util.keystr(path)
         dims = [None] * l.ndim
+        if "k_scales" in ks or "v_scales" in ks:
+            # paged per-page-per-kv-head amax scales (N, KH) [+ stacked
+            # group dim]: follow the pools' TP split of the kv-head dim
+            if model > 1 and l.shape[-1] % model == 0:
+                dims[-1] = "model"
+            return _ns(mesh, *dims)
         if "pages" in ks:
             # paged KV pools (decode_attn_impl="paged_pallas"): pages have
             # no batch dim (slots share the pool), so never batch-shard;
@@ -127,10 +133,15 @@ def cache_shardings(cache_abs: Any, mesh: Mesh, cfg: ModelConfig,
                     break
             return _ns(mesh, *dims)
         s_dim = b_dim + 1
+        from repro.kvcache import normalize_dtype
         if (cfg.decode_attn_impl == "cp" and shape.mode == "decode"
+                and normalize_dtype(cfg.kv_cache_dtype) == "bfloat16"
                 and "['kv']" in ks and l.ndim > s_dim
                 and l.shape[s_dim] % model == 0):
-            # context-parallel decode: cache sequence over "model"
+            # context-parallel decode: cache sequence over "model".
+            # Quantized caches are excluded — transformer.group_forward
+            # routes them to eager decode (CP is shard-local), and a
+            # seq-sharded cache there would all-gather every step.
             dims[s_dim] = "model"
             return _ns(mesh, *dims)
         if l.ndim > s_dim and l.shape[s_dim] == shape.seq_len:

@@ -6,7 +6,12 @@ Entry points per layer:
   * ``attention_decode_paged`` — one-token step, all slots, against paged
     KV pools via the Pallas flash-decoding kernel
     (``kernels/paged_attention``; page bookkeeping in ``repro.serve.paged``)
-  * ``init_kv_cache`` / ``init_paged_kv_cache`` — cache allocation
+
+Cache allocation / writes / dequant live in ``repro.kvcache`` (the one
+implementation for every layout × dtype × style combination); this module
+only computes.  Quantized caches are consumed FUSED: the per-position K
+scale folds into the score contraction and the V scale into the
+probs·V contraction, so no dequantized copy of the cache is materialized.
 
 MLA (DeepSeek-V2 style) compresses KV into a latent ``c_kv`` plus a shared
 decoupled-RoPE key; decode uses the absorbed-matmul trick so the cache is
@@ -324,49 +329,7 @@ def _mla_forward(p: dict, x: jax.Array, a: AttentionConfig, *,
 
 
 # ---------------------------------------------------------------------------
-# KV cache
-
-
-def init_kv_cache(batch: int, max_len: int, a: AttentionConfig, *,
-                  style: str = "full", dtype=jnp.bfloat16) -> dict:
-    """``style`` is AE-LLM's c_inf KV arm: it can *narrow* the stored cache
-    (gqa-style: min(kvh, 8) heads; mqa-style: 1 head, heads mean-merged)."""
-    if a.kind == "mla":
-        return {
-            "c_kv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
-            "k_pe": jnp.zeros((batch, max_len, a.rope_head_dim), dtype),
-        }
-    kvh = cache_kv_heads(a, style)
-    return {
-        "k": jnp.zeros((batch, max_len, kvh, a.head_dim), dtype),
-        "v": jnp.zeros((batch, max_len, kvh, a.head_dim), dtype),
-    }
-
-
-def init_paged_kv_cache(n_slots: int, n_pages: int, pages_per_slot: int,
-                        a: AttentionConfig, *, page_size: int = 256,
-                        style: str = "full", dtype=jnp.bfloat16) -> dict:
-    """Paged cache for one attention layer: page pools shared by all slots
-    plus a per-slot block table (page 0 = null page, see serve/paged.py).
-    The block table is replicated into every layer's cache dict so the
-    decode step stays a pure function of (params, token, cache, pos)."""
-    if a.kind == "mla":
-        raise NotImplementedError("paged decode: standard attention only")
-    kvh = cache_kv_heads(a, style)
-    return {
-        "k_pages": jnp.zeros((n_pages, page_size, kvh, a.head_dim), dtype),
-        "v_pages": jnp.zeros((n_pages, page_size, kvh, a.head_dim), dtype),
-        "block_table": jnp.zeros((n_slots, pages_per_slot), jnp.int32),
-    }
-
-
-def cache_kv_heads(a: AttentionConfig, style: str) -> int:
-    kvh = a.kv_heads_effective()
-    if style == "mqa":
-        return 1
-    if style == "gqa":
-        return min(kvh, 8)
-    return kvh
+# KV cache consumption (allocation/writes: repro.kvcache)
 
 
 def _merge_heads(x: jax.Array, kvh_store: int) -> jax.Array:
@@ -384,17 +347,12 @@ def attention_prefill(p: dict, x: jax.Array, a: AttentionConfig, cache: dict, *,
     """Run full-seq attention AND fill the cache for positions [0, s)."""
     b, s, _ = x.shape
     y = attention_forward(p, x, a, use_flash=use_flash, **chunk_kw)
+    from repro import kvcache
     if a.kind == "mla":
         c_kv = linear_apply(p["kv_down"], x)
         k_pe = linear_apply(p["k_rope"], x).reshape(b, s, 1, a.rope_head_dim)
         k_pe = apply_rope(k_pe, jnp.arange(s)[None, :], a.rope_theta)[:, :, 0]
-        cache = {
-            "c_kv": jax.lax.dynamic_update_slice(
-                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
-            "k_pe": jax.lax.dynamic_update_slice(
-                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0)),
-        }
-        return y, cache
+        return y, kvcache.prefill_write(cache, {"c_kv": c_kv, "k_pe": k_pe})
     kvh = a.kv_heads_effective()
     k = linear_apply(p["wk"], x).reshape(b, s, kvh, a.head_dim)
     v = linear_apply(p["wv"], x).reshape(b, s, kvh, a.head_dim)
@@ -407,13 +365,7 @@ def attention_prefill(p: dict, x: jax.Array, a: AttentionConfig, cache: dict, *,
     from repro.sharding.ctx import maybe_constrain
     k = maybe_constrain(k, ("pod", "data"), None, None, None)
     v = maybe_constrain(v, ("pod", "data"), None, None, None)
-    cache = {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
-    }
-    return y, cache
+    return y, kvcache.prefill_write(cache, {"k": k, "v": v})
 
 
 def _posv(pos: jax.Array, b: int) -> jax.Array:
@@ -421,17 +373,12 @@ def _posv(pos: jax.Array, b: int) -> jax.Array:
     return jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (b,))
 
 
-def _update_cache(cache: jax.Array, new: jax.Array, pos: jax.Array):
-    """Per-batch scatter of (B,1,...) ``new`` into (B,S,...) at pos (B,)."""
-    def one(c, n, p):
-        idx = (p,) + (0,) * (c.ndim - 1)
-        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), idx)
-    return jax.vmap(one)(cache, new, pos)
-
-
 def attention_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
                      pos: jax.Array, *, style: str = "full") -> tuple[jax.Array, dict]:
-    """One-token step.  x: (B,1,d); pos: scalar or per-batch (B,) position."""
+    """One-token step.  x: (B,1,d); pos: scalar or per-batch (B,) position.
+    int8/fp8 caches are read fused: the per-position K scale multiplies the
+    scores and the V scale folds into probs before the V contraction."""
+    from repro import kvcache
     if a.kind == "mla":
         return _mla_decode(p, x, a, cache, pos)
     b, _, d = x.shape
@@ -449,8 +396,8 @@ def attention_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
     k_new = _merge_heads(k_new, kvh_store)
     v_new = _merge_heads(v_new, kvh_store)
 
-    k_cache = _update_cache(cache["k"], k_new, pos)
-    v_cache = _update_cache(cache["v"], v_new, pos)
+    cache = kvcache.decode_write(cache, {"k": k_new, "v": v_new}, pos)
+    k_cache, v_cache, k_s, v_s = kvcache.kv_views(cache)
 
     t = k_cache.shape[1]
     kpos = jnp.arange(t)
@@ -459,15 +406,27 @@ def attention_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
         valid &= kpos[None, :] > pos[:, None] - a.window
     qg = q.reshape(b, 1, kvh_store, g, a.head_dim)
     scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
-                        k_cache.astype(qg.dtype),
-                        preferred_element_type=jnp.float32) * scale
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    o = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(x.dtype))
+    if k_s is None:
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                            k_cache.astype(qg.dtype),
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache.astype(x.dtype))
+    else:
+        # (B,T,KH) scales -> (B,KH,1,1,T) factors on the score/probs axes
+        ks_t = k_s.transpose(0, 2, 1)[:, :, None, None, :]
+        vs_t = v_s.transpose(0, 2, 1)[:, :, None, None, :]
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                            k_cache.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) * scale * ks_t
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", probs * vs_t,
+                       v_cache.astype(jnp.float32)).astype(x.dtype)
     o = o.reshape(b, 1, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o, a))
-    return y, {"k": k_cache, "v": v_cache}
+    return y, cache
 
 
 def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
@@ -478,13 +437,14 @@ def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
     launch (``decode_attn_impl == "paged_pallas"``).
 
     x: (S,1,d); pos: (S,) per-slot lengths — position where this token's
-    K/V is written.  cache: {k_pages, v_pages, block_table} from
-    ``init_paged_kv_cache``.  Slots without allocated pages write to the
-    null page and read back zeros (their outputs are garbage; the engine
-    masks them).
+    K/V is written.  cache: {k_pages, v_pages[, k_scales, v_scales],
+    block_table} from ``repro.kvcache.alloc_paged``.  Slots without
+    allocated pages write to the null page and read back zeros (their
+    outputs are garbage; the engine masks them).  Quantized pools run
+    the fused-dequant kernel variant (scales scalar-prefetched).
     """
+    from repro import kvcache
     from repro.kernels.paged_attention.ops import paged_attention
-    from repro.serve.paged import paged_write_batch
     if a.window is not None:
         raise NotImplementedError("paged decode: sliding window unsupported")
     b, _, d = x.shape
@@ -501,14 +461,13 @@ def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
     k_new = _merge_heads(k_new, kvh_store)[:, 0]               # (S,KH,D)
     v_new = _merge_heads(v_new, kvh_store)[:, 0]
 
-    bt = cache["block_table"]
-    k_pages, v_pages = paged_write_batch(
-        cache["k_pages"], cache["v_pages"], bt, pos, k_new, v_new)
-    o = paged_attention(q, k_pages, v_pages, bt, pos + 1,
+    cache = kvcache.paged_write_batch(cache, pos, k_new, v_new)
+    k_pages, v_pages, k_sc, v_sc, bt = kvcache.paged_views(cache)
+    o = paged_attention(q, k_pages, v_pages, bt, pos + 1, k_sc, v_sc,
                         use_kernel=use_kernel)                 # (S,H,D)
     o = o.reshape(b, 1, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
-    return y, {"k_pages": k_pages, "v_pages": v_pages, "block_table": bt}
+    return y, cache
 
 
 def attention_decode_cp(p: dict, x: jax.Array, a: AttentionConfig,
@@ -595,6 +554,7 @@ def attention_decode_cp(p: dict, x: jax.Array, a: AttentionConfig,
 def _mla_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
                 pos: jax.Array) -> tuple[jax.Array, dict]:
     """Absorbed-matmul MLA decode: score against the latent cache directly."""
+    from repro import kvcache
     b = x.shape[0]
     h, hd, rr, dc = a.num_heads, a.head_dim, a.rope_head_dim, a.kv_lora_rank
     pos = _posv(pos, b)
@@ -603,8 +563,9 @@ def _mla_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
     c_new = linear_apply(p["kv_down"], x)                         # (B,1,dc)
     k_pe_new = linear_apply(p["k_rope"], x).reshape(b, 1, 1, rr)
     k_pe_new = apply_rope(k_pe_new, posv, a.rope_theta)[:, :, 0]
-    c_cache = _update_cache(cache["c_kv"], c_new, pos)
-    pe_cache = _update_cache(cache["k_pe"], k_pe_new, pos)
+    cache = kvcache.decode_write(cache, {"c_kv": c_new, "k_pe": k_pe_new},
+                                 pos)
+    c_cache, pe_cache = cache["c_kv"], cache["k_pe"]
 
     qx = linear_apply(p["q_down"], x) if "q_down" in p else x
     q = linear_apply(p["q_up"], qx).reshape(b, 1, h, hd + rr)
@@ -629,4 +590,4 @@ def _mla_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
     o = jnp.einsum("bshc,chd->bshd", o_lat, w_uv.astype(o_lat.dtype))
     o = o.reshape(b, 1, h * hd)
     y = linear_apply(p["wo"], o)
-    return y, {"c_kv": c_cache, "k_pe": pe_cache}
+    return y, cache

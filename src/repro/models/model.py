@@ -31,17 +31,27 @@ class LM:
     def init(self, key) -> dict:
         cfg = self.cfg
         ks = jax.random.split(key, 5)
+        # Vocab padding must be exact: draw embed/head at the REAL vocab
+        # size and zero-pad to padded_vocab, so the live rows are
+        # bit-identical to the unpadded model's (padding the *draw shape*
+        # would change every value).  Pad rows are never gathered, pad
+        # logits are masked to -inf, and the mask zeroes their grads.
+        v_pad = cfg.padded_vocab - cfg.vocab_size
+        embed = init_embedding(ks[0], cfg.vocab_size, cfg.d_model, self.dtype)
+        if v_pad:
+            embed["w"] = jnp.pad(embed["w"], ((0, v_pad), (0, 0)))
         params: Dict[str, Any] = {
-            "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
-                                    self.dtype),
+            "embed": embed,
             "layers": init_stack(ks[1], cfg, self.dtype),
             "final_norm": init_norm(cfg.norm, cfg.d_model, self.dtype),
         }
         if not cfg.tie_embeddings:
             from repro.models.layers import init_linear
-            params["lm_head"] = init_linear(ks[2], cfg.d_model,
-                                            cfg.padded_vocab,
-                                            dtype=self.dtype)
+            head = init_linear(ks[2], cfg.d_model, cfg.vocab_size,
+                               dtype=self.dtype)
+            if v_pad:
+                head["w"] = jnp.pad(head["w"], ((0, 0), (0, v_pad)))
+            params["lm_head"] = head
         if cfg.encoder is not None:
             params["encoder"] = init_encoder(ks[3], cfg, self.dtype)
         return params
@@ -120,8 +130,12 @@ class LM:
         return self._mask_pad_logits(out)
 
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int) -> dict:
-        return init_stack_cache(self.cfg, batch, max_len)
+    def init_cache(self, batch: int, max_len: int, *,
+                   kv_dtype: Optional[str] = None) -> dict:
+        """Contiguous decode/prefill cache (layout/dtype/style resolved by
+        ``repro.kvcache.CacheSpec``); ``kv_dtype`` overrides the config
+        (e.g. a bf16 staging cache for the paged engine's admission)."""
+        return init_stack_cache(self.cfg, batch, max_len, kv_dtype=kv_dtype)
 
     def init_paged_cache(self, n_slots: int, n_pages: int,
                          pages_per_slot: int, *, page_size: int = 256) -> dict:

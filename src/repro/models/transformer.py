@@ -76,27 +76,29 @@ def init_group(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
 
 def init_group_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                      paged: bool = False, n_pages: int = 0,
-                     pages_per_slot: int = 0, page_size: int = 256) -> dict:
+                     pages_per_slot: int = 0, page_size: int = 256,
+                     kv_dtype: Optional[str] = None) -> dict:
     """KV caches / recurrent states for one group (decode & prefill).
     ``paged=True`` swaps each attention layer's contiguous (B, S, KH, D)
     cache for page pools + a block table (decode_attn_impl="paged_pallas");
-    SSM states and cross-attention caches are position-free and unchanged."""
+    SSM states and cross-attention caches are position-free and unchanged.
+    ``kv_dtype`` overrides ``cfg.kv_cache_dtype`` (the paged engine
+    prefills into a bf16 staging cache and quantizes at the scatter)."""
+    from repro.kvcache import CacheSpec, alloc_contiguous, alloc_paged
     kinds = block_kinds(cfg)
     cache = {}
-    kv_dtype = (jnp.bfloat16 if cfg.kv_cache_dtype == "bfloat16"
-                else jnp.int8)
+    spec = CacheSpec(layout="paged" if paged else "contiguous",
+                     dtype=kv_dtype or cfg.kv_cache_dtype,
+                     style=cfg.kv_cache_style, page_size=page_size)
     for i, bk in enumerate(kinds):
         c: Dict[str, Any] = {}
         if bk["kind"] == "attn":
             if paged:
-                c["kv"] = attn_mod.init_paged_kv_cache(
-                    batch, n_pages, pages_per_slot, cfg.attention,
-                    page_size=page_size, style=cfg.kv_cache_style,
-                    dtype=kv_dtype)
+                c["kv"] = alloc_paged(spec, cfg.attention, batch, n_pages,
+                                      pages_per_slot)
             else:
-                c["kv"] = attn_mod.init_kv_cache(
-                    batch, max_len, cfg.attention, style=cfg.kv_cache_style,
-                    dtype=kv_dtype)
+                c["kv"] = alloc_contiguous(spec, cfg.attention, batch,
+                                           max_len)
         elif bk["kind"] == "mamba":
             c["state"] = ssm_mod.init_mamba_state(batch, cfg.d_model, cfg.ssm)
         elif bk["kind"] == "rwkv6":
@@ -187,7 +189,10 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                         blk["attn"], h, a, c["kv"], pos,
                         style=cfg.kv_cache_style)
                 elif (cfg.decode_attn_impl == "cp" and mesh is not None
-                        and a.kind != "mla"):
+                        and a.kind != "mla" and "k_scale" not in c["kv"]):
+                    # CP decode reads/writes shard-local slabs inside
+                    # shard_map; quantized caches fall through to eager
+
                     y, kv = attn_mod.attention_decode_cp(
                         blk["attn"], h, a, c["kv"], pos, mesh=mesh)
                 else:

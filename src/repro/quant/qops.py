@@ -34,8 +34,13 @@ def quantized_matmul(x: jax.Array, p: dict) -> jax.Array:
     if qw.dtype == jnp.uint8:
         return int4_matmul(x, qw, p["scale"])
     if qw.dtype == FP8:
-        w = qw.astype(jnp.float32) * p["scale"][None, :]
-        return (x.astype(jnp.float32) @ w).astype(x.dtype)
+        # scale is per output column, so it commutes with the contraction:
+        # (x @ (qw·s)) == (x @ qw)·s — the full-size scale multiply is
+        # folded into the (much smaller) output.  The fp32 upcast of qw
+        # feeding the dot remains (XLA fuses it into the matmul read on
+        # TPU); a true fp8-MXU dot is a ROADMAP follow-up.
+        y = x.astype(jnp.float32) @ qw.astype(jnp.float32)
+        return (y * p["scale"]).astype(x.dtype)
     raise ValueError(f"unrecognized quantized dtype {qw.dtype}")
 
 
@@ -58,10 +63,6 @@ def quantize_linear(p: dict, *, quant: str, scales=None) -> dict:
         out.update(qw=(w / s[None, :]).astype(FP8), scale=s)
     else:
         raise ValueError(quant)
-    if scales is not None:
-        out["eq_scales"] = scales  # applied to activations at runtime? no —
-        # equalization is folded into the *previous* layer's output scale;
-        # we keep the record for introspection only.
     return out
 
 

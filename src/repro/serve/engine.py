@@ -231,9 +231,11 @@ class PagedEngine(_EngineBase):
                          eos_id=eos_id)
         self.page_size = page_size
         self.decode_block = decode_block
-        pages_per_slot = (max_len + page_size - 1) // page_size
+        from repro.kvcache import paged_pool_shape
+        pages_per_slot, default_pages = paged_pool_shape(n_slots, max_len,
+                                                         page_size)
         if n_pages is None:
-            n_pages = n_slots * pages_per_slot + 1   # +1: null page
+            n_pages = default_pages                  # incl. null page 0
         self.alloc = PageAllocator(n_pages, pages_per_slot, n_slots)
         self.cache = lm.init_paged_cache(n_slots, n_pages, pages_per_slot,
                                          page_size=page_size)
@@ -258,9 +260,11 @@ class PagedEngine(_EngineBase):
                     key):
         """Batched admission: ONE padded prefill for every queued request
         admitted this tick, scattered into the paged pools, first token
-        sampled on device.  tokens: (nb, plen_pad) right-padded."""
+        sampled on device.  tokens: (nb, plen_pad) right-padded.  The
+        staging cache is bf16 regardless of cfg.kv_cache_dtype: the
+        scatter quantizes once, with exact per-page amax scales."""
         nb, t = tokens.shape
-        tmp = self.lm.init_cache(nb, t)
+        tmp = self.lm.init_cache(nb, t, kv_dtype="bfloat16")
         logits, tmp = self.lm.prefill(params, tokens, tmp, lengths=plens)
         cache = scatter_prefill_cache(cache, tmp, slot_ids, plens)
         tok = _sample_batch(logits, temps, key)

@@ -1,20 +1,25 @@
-"""Paged KV cache (PagedAttention adapted for TPU).
+"""Paged KV cache host bookkeeping (PagedAttention adapted for TPU).
 
 vLLM pages are 16-token and pointer-chased per token — efficient on GPUs
 with per-thread gathers, hostile to TPU's vector memory system.  The TPU
 adaptation (DESIGN.md §3): large lane-aligned pages (256-token default), a
-per-slot block table, and — since this PR — a Pallas flash-decoding kernel
+per-slot block table, and a Pallas flash-decoding kernel
 (``kernels/paged_attention``) whose BlockSpec index maps stream pages
 straight from HBM, one (page, head_dim) tile per grid step, for ALL active
 slots in one launch.  The legacy ``paged_attention`` below (one slot,
 ``jnp.take`` gather into a contiguous copy) is kept as a readable baseline.
+
+This module owns the HOST side: the free list / block-table accounting and
+the engine-facing cache-tree walkers.  Device-side page arrays, quantized
+(int8/fp8) pools with their per-page scales, and all write ops live in
+``repro.kvcache`` — the one cache implementation.
 
 Page 0 is the NULL page: free slots' block-table rows point at it, and
 masked writes (padding tokens, retired slots) are routed into it, so device
 code never needs a branch for "no page allocated here".
 
 Equivalence with contiguous caches is property-tested in
-tests/test_serving.py.
+tests/test_serving.py and tests/test_kvcache.py.
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kvcache import CacheSpec, dequantize, paged_scatter_prefill
 
 PAGE = 256
 
@@ -76,30 +83,43 @@ class PageAllocator:
 
 
 class PagedKVPool:
-    """Single-layer paged K/V pool (allocator + device page arrays).
+    """Single-layer paged K/V pool (allocator + kvcache device arrays).
 
     The serving engine holds per-layer pools inside the model cache and
     uses :class:`PageAllocator` directly; this class is the self-contained
-    unit the kernel tests and examples drive.
+    unit the kernel tests and examples drive.  ``dtype`` accepts the
+    CacheSpec names (bf16 | int8 | fp8); quantized pools carry per-page
+    scales (see ``repro.kvcache``).
     """
 
     def __init__(self, n_pages: int, kv_heads: int, head_dim: int,
                  max_pages_per_slot: int, n_slots: int,
-                 dtype=jnp.bfloat16, page_size: int = PAGE):
+                 dtype: str = "bf16", page_size: int = PAGE):
+        from repro.configs.base import AttentionConfig
+        from repro.kvcache import alloc_paged
         self.n_pages = n_pages
         self.kv_heads = kv_heads
         self.head_dim = head_dim
-        self.dtype = dtype
         self.page_size = page_size
+        self.spec = CacheSpec(layout="paged", dtype=dtype,
+                              page_size=page_size)
         self.allocator = PageAllocator(n_pages, max_pages_per_slot, n_slots)
-        self.k_pages = jnp.zeros((n_pages, page_size, kv_heads, head_dim),
-                                 dtype)
-        self.v_pages = jnp.zeros((n_pages, page_size, kv_heads, head_dim),
-                                 dtype)
+        a = AttentionConfig(kind="mha", num_heads=kv_heads,
+                            num_kv_heads=kv_heads, head_dim=head_dim)
+        self.cache = alloc_paged(self.spec, a, n_slots, n_pages,
+                                 max_pages_per_slot)
 
     @property
     def free(self) -> List[int]:
         return self.allocator.free
+
+    @property
+    def k_pages(self) -> jax.Array:
+        return self.cache["k_pages"]
+
+    @property
+    def v_pages(self) -> jax.Array:
+        return self.cache["v_pages"]
 
     @property
     def block_table(self) -> jax.Array:
@@ -117,68 +137,32 @@ class PagedKVPool:
 
 
 # ---------------------------------------------------------------------------
-# Device-side page ops (jit-traceable, batched over slots)
-
-
-def paged_write_batch(k_pages, v_pages, block_table, positions,
-                      k_new, v_new):
-    """Write one token per slot: k_new/v_new (S, KVH, D) land at logical
-    position ``positions[s]`` of each slot's pages.  Slots whose row in
-    the block table is unallocated resolve to the null page (their writes
-    collide there harmlessly)."""
-    page = k_pages.shape[1]
-    s_n = positions.shape[0]
-    pidx = block_table[jnp.arange(s_n), positions // page]       # (S,)
-    off = positions % page
-    k_pages = k_pages.at[pidx, off].set(k_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[pidx, off].set(v_new.astype(v_pages.dtype))
-    return k_pages, v_pages
-
-
-def paged_scatter_prefill(k_pages, v_pages, block_table, slot_ids, lengths,
-                          k_rows, v_rows):
-    """Scatter a batched prefill's contiguous K/V into pages.
-
-    k_rows/v_rows: (B, T, KVH, D) — row b's tokens [0, lengths[b]) go to
-    slot ``slot_ids[b]``'s pages; padding tokens (and rows with length 0)
-    are routed to the null page.  One scatter per array, no host loop.
-    """
-    b, t = k_rows.shape[:2]
-    page = k_pages.shape[1]
-    tpos = jnp.arange(t)[None, :]                                # (1,T)
-    valid = tpos < lengths[:, None]                              # (B,T)
-    pidx = block_table[slot_ids[:, None], tpos // page]          # (B,T)
-    pidx = jnp.where(valid, pidx, 0)
-    off = jnp.broadcast_to(tpos % page, (b, t))
-    k_pages = k_pages.at[pidx, off].set(k_rows.astype(k_pages.dtype))
-    v_pages = v_pages.at[pidx, off].set(v_rows.astype(v_pages.dtype))
-    return k_pages, v_pages
+# Engine-facing cache-tree walkers (device ops themselves: repro.kvcache)
 
 
 def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths):
     """Scatter a whole model's batched-prefill cache into the paged cache.
 
     Walks the two cache pytrees in parallel; every paged attention node
-    ({k_pages, v_pages, block_table}) receives the matching contiguous
-    node's ({k, v}) rows via :func:`paged_scatter_prefill` (vmapped over
-    the stacked-groups axis when cfg.scan_layers).  Position-free state
-    nodes (SSM, cross-attn) are not supported — the paged engine gates on
+    ({k_pages, v_pages[, scales], block_table}) receives the matching
+    contiguous node's rows via ``repro.kvcache.paged_scatter_prefill``
+    (vmapped over the stacked-groups axis when cfg.scan_layers).  Staging
+    caches are expected bf16; a quantized staging node is dequantized
+    before the scatter re-quantizes per page.  Position-free state nodes
+    (SSM, cross-attn) are not supported — the paged engine gates on
     attention-only models.
     """
     if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
-        kp, vp, bt = (paged_cache["k_pages"], paged_cache["v_pages"],
-                      paged_cache["block_table"])
-        if kp.ndim == 5:                       # (G, N, page, KH, D) stacked
-            kp, vp = jax.vmap(
-                paged_scatter_prefill,
-                in_axes=(0, 0, 0, None, None, 0, 0))(
-                kp, vp, bt, slot_ids, lengths,
-                contig_cache["k"], contig_cache["v"])
-        else:
-            kp, vp = paged_scatter_prefill(
-                kp, vp, bt, slot_ids, lengths,
-                contig_cache["k"], contig_cache["v"])
-        return {"k_pages": kp, "v_pages": vp, "block_table": bt}
+        k_rows, v_rows = contig_cache["k"], contig_cache["v"]
+        if "k_scale" in contig_cache:
+            k_rows = dequantize(k_rows, contig_cache["k_scale"])
+            v_rows = dequantize(v_rows, contig_cache["v_scale"])
+        if paged_cache["k_pages"].ndim == 5:   # (G, N, page, KH, D) stacked
+            return jax.vmap(paged_scatter_prefill,
+                            in_axes=(0, None, None, 0, 0))(
+                paged_cache, slot_ids, lengths, k_rows, v_rows)
+        return paged_scatter_prefill(paged_cache, slot_ids, lengths,
+                                     k_rows, v_rows)
     if isinstance(paged_cache, dict):
         return {k: scatter_prefill_cache(paged_cache[k], contig_cache[k],
                                          slot_ids, lengths)
@@ -188,17 +172,26 @@ def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths):
 
 
 def set_block_table_rows(cache, slots, rows):
-    """Push host block-table rows into every layer's device block table.
+    """Push host block-table rows into every layer's device block table,
+    and reset the per-page scales of the rows' pages (quantized pools):
+    a page's scale lifecycle is tied to its allocation, so stale amax
+    from a released slot never lingers into the next occupant.
     slots: (n,) slot indices; rows: (n, pages_per_slot) int32."""
     slots = jnp.asarray(slots, jnp.int32)
     rows = jnp.asarray(rows, jnp.int32)
+    pages = rows.reshape(-1)                   # incl. 0s: null page harmless
 
     def leaf(path, l):
-        if "block_table" not in jax.tree_util.keystr(path):
-            return l
-        if l.ndim == 3:                        # (G, S, P) stacked groups
-            return l.at[:, slots, :].set(rows[None])
-        return l.at[slots].set(rows)
+        ks = jax.tree_util.keystr(path)
+        if "block_table" in ks:
+            if l.ndim == 3:                    # (G, S, P) stacked groups
+                return l.at[:, slots, :].set(rows[None])
+            return l.at[slots].set(rows)
+        if "k_scales" in ks or "v_scales" in ks:
+            if l.ndim == 3:                    # (G, N, KH) stacked groups
+                return l.at[:, pages].set(0.0)
+            return l.at[pages].set(0.0)
+        return l
 
     return jax.tree_util.tree_map_with_path(leaf, cache)
 
@@ -210,7 +203,8 @@ def set_block_table_rows(cache, slots, rows):
 
 def paged_write(k_pages, v_pages, block_table, slot, pos, k_new, v_new):
     """Write one token's K/V at logical position ``pos`` of ``slot``.
-    k_new/v_new: (kvh, hd)."""
+    k_new/v_new: (kvh, hd).  bf16 pools only — the quantized write path
+    is ``repro.kvcache.paged_write_batch``."""
     page = k_pages.shape[1]
     page_idx = block_table[slot, pos // page]
     off = pos % page

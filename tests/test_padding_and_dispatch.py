@@ -126,8 +126,7 @@ def test_cp_decode_matches_eager():
     """Context-parallel flash-decoding == eager decode on a 1×1 mesh
     (structural + numerical check; multi-device runs in the dry-run)."""
     from repro.models.attention import (attention_decode,
-                                        attention_decode_cp, init_attention,
-                                        init_kv_cache)
+                                        attention_decode_cp, init_attention)
     from repro.configs.base import AttentionConfig
     from repro.sharding.ctx import use_mesh
     a = AttentionConfig(kind="gqa", num_heads=4, num_kv_heads=2,
@@ -135,7 +134,8 @@ def test_cp_decode_matches_eager():
     p = init_attention(jax.random.PRNGKey(0), 32, a, jnp.float32)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     b = 2
-    cache = init_kv_cache(b, 64, a, dtype=jnp.float32)
+    cache = {"k": jnp.zeros((b, 64, 2, 16), jnp.float32),
+             "v": jnp.zeros((b, 64, 2, 16), jnp.float32)}
     # put some history into the cache
     hist = jax.random.normal(jax.random.PRNGKey(1), (b, 8, 2, 16))
     cache = {"k": cache["k"].at[:, :8].set(hist),

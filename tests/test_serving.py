@@ -11,8 +11,8 @@ import pytest
 
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
-from repro.serve.paged import (OutOfPagesError, PageAllocator, PagedKVPool,
-                               paged_scatter_prefill, paged_write_batch)
+from repro.kvcache import paged_scatter_prefill, paged_write_batch
+from repro.serve.paged import OutOfPagesError, PageAllocator, PagedKVPool
 
 
 def _rand_paged(rng, s, h, kvh, d, page, pps, dtype):
@@ -85,30 +85,30 @@ def test_paged_write_and_scatter():
     rng = np.random.default_rng(2)
     s, kvh, d, page, pps = 2, 2, 16, 4, 3
     n = s * pps + 1
-    kp = jnp.zeros((n, page, kvh, d))
-    vp = jnp.zeros((n, page, kvh, d))
     bt = (1 + jnp.arange(s * pps, dtype=jnp.int32)).reshape(s, pps)
+    cache = {"k_pages": jnp.zeros((n, page, kvh, d)),
+             "v_pages": jnp.zeros((n, page, kvh, d)),
+             "block_table": bt}
     # batched prefill scatter: ragged lengths, padding -> null page
     t_pad = 8
     k_rows = jnp.asarray(rng.normal(size=(s, t_pad, kvh, d)), jnp.float32)
     v_rows = jnp.asarray(rng.normal(size=(s, t_pad, kvh, d)), jnp.float32)
     lengths = jnp.asarray([5, 8], jnp.int32)
     slot_ids = jnp.arange(s, dtype=jnp.int32)
-    kp, vp = paged_scatter_prefill(kp, vp, bt, slot_ids, lengths,
-                                   k_rows, v_rows)
+    cache = paged_scatter_prefill(cache, slot_ids, lengths, k_rows, v_rows)
     for sl in range(s):
         ln = int(lengths[sl])
         for t in range(ln):
-            got = np.asarray(kp[bt[sl, t // page], t % page])
+            got = np.asarray(cache["k_pages"][bt[sl, t // page], t % page])
             np.testing.assert_allclose(got, np.asarray(k_rows[sl, t]),
                                        atol=1e-6)
     # single-token batched write at per-slot positions
     k_new = jnp.asarray(rng.normal(size=(s, kvh, d)), jnp.float32)
     v_new = jnp.asarray(rng.normal(size=(s, kvh, d)), jnp.float32)
-    kp, vp = paged_write_batch(kp, vp, bt, lengths, k_new, v_new)
+    cache = paged_write_batch(cache, lengths, k_new, v_new)
     for sl in range(s):
         ln = int(lengths[sl])
-        got = np.asarray(kp[bt[sl, ln // page], ln % page])
+        got = np.asarray(cache["k_pages"][bt[sl, ln // page], ln % page])
         np.testing.assert_allclose(got, np.asarray(k_new[sl]), atol=1e-6)
 
 

@@ -106,7 +106,10 @@ def test_build_cell_lowers_on_1x1_mesh(arch, shape_name):
         cell = build_cell(cfg, shape, mesh, fsdp=False)
         lowered = cell.lower()
         compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    # list-or-dict cost_analysis drift is resolved by the same shim the
+    # dry-run uses, so this test guards the production path
+    from repro.launch.roofline import resolve_cost_analysis
+    assert resolve_cost_analysis(compiled)["flops"] > 0
 
 
 def test_cache_shardings_structure():
