@@ -1,27 +1,42 @@
-"""Serving throughput benchmark: eager engine vs paged-Pallas engine.
+"""Serving throughput benchmark: eager vs paged engines vs the scheduler.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         [--arch qwen2-1.5b] [--requests 16] [--slots 4] [--max-new 32] \
-        [--decode-block 8] [--page-size 64] [--kv-dtype int8] [--out PATH]
+        [--decode-block 8] [--page-size 64] [--kv-dtype int8] \
+        [--policies fcfs,edf] [--shared-prefix 256] [--arrival-rate 4] \
+        [--slo-ttft 2000] [--slo-tpot 500] [--out PATH]
 
-Drives both engines over the same synthetic request trace and writes a
-JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``)
-with tokens/sec, p50/p99 TTFT (submit -> first token) and TPOT (mean
-inter-token time), plus the paged engine's host-sync counter — the number
-the fused decode loop exists to shrink (one device->host transition per
-``decode_block`` tokens instead of one per token).
+Drives the engines over the same synthetic request trace and writes a
+JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``):
 
-``--kv-dtype`` runs the paged engine on a quantized (int8/fp8) KV cache
-(repro.kvcache: per-page amax scales, fused-dequant kernel).  The
-``kv_cache`` section of the artifact reports, for EVERY cache dtype at
-this run's slots/context: the allocated KV-pool bytes, stored
-bytes/token, and how many slots of ``max_len`` context fit per GiB of
-pool — the ~2× serving-capacity headline of int8 KV at fixed HBM.
+* ``eager`` / ``paged_pallas`` — the base engines (tokens/sec, TTFT/TPOT
+  percentiles, host-sync counter).
+* ``sched`` — one row per ``--policies`` entry through
+  ``repro.sched.SchedEngine``: the same latency percentiles plus queue
+  wait (submit -> slot grant) as its own percentile row, SLO attainment
+  and goodput against ``--slo-ttft``/``--slo-tpot``, and the scheduler
+  telemetry (prefix hit rate, prefill tokens computed vs served from
+  cache, preemption count, chunk dispatches).
+* ``prefix_cache`` — warm vs cold comparison on the shared-prefix
+  workload: prefill tokens computed with the prefix cache on/off, their
+  ratio, and whether greedy outputs were token-identical.
+
+Latency accounting: TTFT is measured from ``submit()`` (arrival), NOT
+from admission — under load the queue wait is the scheduler's doing and
+hiding it would make every policy look alike; queue wait is additionally
+reported as its own row so policies can be compared on ordering alone.
+
+``--arrival-rate R`` switches the trace to open-loop Poisson arrivals
+(exponential interarrival times at R req/s, one shared schedule across
+all engines); 0 submits everything upfront (closed loop).
+``--shared-prefix N`` prepends one N-token system prompt to every
+request — the prefix-cache workload.
 
 Runs on CPU (smoke config; the Pallas kernel in interpret mode) so the
 artifact lands in every environment; on TPU the same script measures the
 compiled kernel.  Absolute numbers are tier-relative — the tracked claims
-are the paged/eager ratio, the sync count, and the per-dtype KV bytes.
+are the paged/eager ratio, the sync count, the per-dtype KV bytes, and
+the warm/cold prefill-token ratio (>= 2x on the shared-prefix workload).
 """
 from __future__ import annotations
 
@@ -44,27 +59,67 @@ def _percentiles(xs):
             "p99": round(float(np.percentile(xs, 99)) * 1e3, 3)}
 
 
-def run_engine(eng, prompts, max_new, temperature):
-    ids = [eng.submit(p, max_new_tokens=max_new, temperature=temperature)
-           for p in prompts]
+def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
+               slo_ttft_s=None, slo_tpot_s=None):
+    """Drive ``eng`` over ``prompts`` (open-loop when ``arrivals`` gives
+    per-request submit offsets in seconds) and return (metrics row,
+    per-request out_tokens in submit order)."""
+    from repro.serve.engine import run_open_loop
     t0 = time.perf_counter()
-    done = eng.run_to_completion()
+    if arrivals is None:
+        ids = [eng.submit(p, max_new_tokens=max_new,
+                          temperature=temperature) for p in prompts]
+        done = eng.run_to_completion()
+    else:
+        ids = run_open_loop(eng, prompts, arrivals,
+                            max_new_tokens=max_new,
+                            temperature=temperature)
+        done = dict(eng.registry)
     dt = time.perf_counter() - t0
+
     n_tok = sum(len(done[i].out_tokens) for i in ids)
-    ttft, tpot = [], []
+    ttft, tpot, qwait = [], [], []
+    met_both_tokens = 0
+    n_ttft_ok = n_tpot_ok = 0
     for i in ids:
         r = done[i]
-        ttft.append(r.t_first - r.t_submit)
+        r_ttft = r.t_first - r.t_submit
+        ttft.append(r_ttft)
+        if r.t_admit is not None:
+            qwait.append(r.t_admit - r.t_submit)
+        r_tpot = None
         if len(r.out_tokens) > 1 and r.t_done is not None:
-            tpot.append((r.t_done - r.t_first) / (len(r.out_tokens) - 1))
+            r_tpot = (r.t_done - r.t_first) / (len(r.out_tokens) - 1)
+            tpot.append(r_tpot)
+        ttft_ok = slo_ttft_s is None or r_ttft <= slo_ttft_s
+        tpot_ok = slo_tpot_s is None or r_tpot is None or r_tpot <= slo_tpot_s
+        n_ttft_ok += ttft_ok
+        n_tpot_ok += tpot_ok
+        if ttft_ok and tpot_ok:
+            met_both_tokens += len(r.out_tokens)
     row = {
         "requests": len(ids),
         "tokens": n_tok,
         "wall_s": round(dt, 3),
         "tokens_per_sec": round(n_tok / dt, 2),
         "ttft_ms": _percentiles(ttft),
+        "queue_wait_ms": _percentiles(qwait),
         "tpot_ms": _percentiles(tpot),
     }
+    if slo_ttft_s is not None or slo_tpot_s is not None:
+        if hasattr(eng, "slo_attainment"):
+            att = eng.slo_attainment()       # per-request targets
+        else:
+            att = {"ttft_attainment": round(n_ttft_ok / len(ids), 4),
+                   "tpot_attainment": round(n_tpot_ok / len(ids), 4)}
+        row["slo"] = {
+            "ttft_target_ms": None if slo_ttft_s is None
+            else round(slo_ttft_s * 1e3, 1),
+            "tpot_target_ms": None if slo_tpot_s is None
+            else round(slo_tpot_s * 1e3, 1),
+            **att,
+            "goodput_tokens_per_sec": round(met_both_tokens / dt, 2),
+        }
     if hasattr(eng, "sync_count"):
         row["host_syncs"] = eng.sync_count
         row["decode_steps"] = eng.steps_dispatched
@@ -72,7 +127,11 @@ def run_engine(eng, prompts, max_new, temperature):
     else:
         row["host_syncs"] = n_tok          # eager: one sync per token
         row["tokens_per_sync"] = 1.0
-    return row
+    if hasattr(eng, "telemetry"):
+        # attainment already lives in row["slo"] (one source of truth)
+        row["sched"] = {k: v for k, v in eng.telemetry().items()
+                        if k != "slo"}
+    return row, [list(done[i].out_tokens) for i in ids]
 
 
 def kv_cache_report(cfg, *, slots, max_len, page_size):
@@ -123,6 +182,23 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-eager", action="store_true")
+    ap.add_argument("--skip-paged", action="store_true")
+    # ---- scheduler (repro.sched) ----------------------------------------
+    ap.add_argument("--policies", default="fcfs,edf",
+                    help="comma list of scheduler policies to benchmark "
+                         "(fcfs | sjf | edf); empty skips the scheduler")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one shared N-token system prompt to "
+                         "every request (prefix-cache workload)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals, requests/sec "
+                         "(0: closed loop, submit everything upfront)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="scheduler prefill chunk tokens (page multiple)")
+    ap.add_argument("--slo-ttft", type=float, default=2000.0,
+                    help="TTFT SLO target, ms (tier-relative)")
+    ap.add_argument("--slo-tpot", type=float, default=500.0,
+                    help="TPOT SLO target, ms (tier-relative)")
     ap.add_argument("--out", type=pathlib.Path, default=OUT_DEFAULT)
     args = ap.parse_args(argv)
 
@@ -131,16 +207,30 @@ def main(argv=None):
     from repro.models.model import LM
     from repro.serve.engine import Engine, PagedEngine
 
+    min_len = args.shared_prefix + args.prompt_len + args.max_new + 1
+    if args.max_len < min_len:
+        print(f"[bench] raising --max-len {args.max_len} -> {min_len} "
+              "(shared prefix + prompt + generation must fit one slot)")
+        args.max_len = min_len
+
     cfg = get_smoke_config(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            (int(rng.integers(4, args.prompt_len + 1)),)
-                            ).tolist()
-               for _ in range(args.requests)]
+    shared = rng.integers(0, cfg.vocab_size,
+                          (args.shared_prefix,)).tolist()
+    prompts = [shared + rng.integers(
+        0, cfg.vocab_size,
+        (int(rng.integers(4, args.prompt_len + 1)),)).tolist()
+        for _ in range(args.requests)]
+    arrivals = None
+    if args.arrival_rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             args.requests)).tolist()
 
     kv_dtype = normalize_dtype(args.kv_dtype)
+    slo_kw = dict(slo_ttft_s=args.slo_ttft / 1e3,
+                  slo_tpot_s=args.slo_tpot / 1e3)
     results = {
         "arch": cfg.name,
         "backend": jax.default_backend(),
@@ -149,6 +239,8 @@ def main(argv=None):
         "decode_block": args.decode_block,
         "page_size": args.page_size,
         "kv_dtype": kv_dtype,
+        "shared_prefix": args.shared_prefix,
+        "arrival_rate": args.arrival_rate,
         "kv_cache": kv_cache_report(cfg, slots=args.slots,
                                     max_len=args.max_len,
                                     page_size=args.page_size),
@@ -156,29 +248,88 @@ def main(argv=None):
     if not args.skip_eager:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
                      seed=args.seed)
-        results["eager"] = run_engine(eng, prompts, args.max_new,
-                                      args.temperature)
+        results["eager"], _ = run_engine(eng, prompts, args.max_new,
+                                         args.temperature,
+                                         arrivals=arrivals)
         print(f"[bench] eager : {results['eager']['tokens_per_sec']:8.1f} "
               f"tok/s  ttft p50 {results['eager']['ttft_ms']['p50']} ms  "
               f"syncs {results['eager']['host_syncs']}")
     lm_paged = (lm if kv_dtype == "bfloat16"
                 else LM(cfg.with_(kv_cache_dtype=kv_dtype)))
-    peng = PagedEngine(lm_paged, params, n_slots=args.slots,
-                       max_len=args.max_len, seed=args.seed,
-                       page_size=args.page_size,
-                       decode_block=args.decode_block)
-    results["paged_pallas"] = run_engine(peng, prompts, args.max_new,
-                                         args.temperature)
-    results["paged_pallas"]["kv_dtype"] = kv_dtype
-    kvrep = results["kv_cache"]["bf16" if kv_dtype == "bfloat16"
-                                else kv_dtype]
-    print(f"[bench] paged : "
-          f"{results['paged_pallas']['tokens_per_sec']:8.1f} tok/s  "
-          f"ttft p50 {results['paged_pallas']['ttft_ms']['p50']} ms  "
-          f"syncs {results['paged_pallas']['host_syncs']} "
-          f"({results['paged_pallas']['tokens_per_sync']:.1f} tok/sync)  "
-          f"kv {kv_dtype} pool {kvrep['pool_mib']} MiB "
-          f"({kvrep['max_slots_per_gib']} slots/GiB)")
+    if not args.skip_paged:
+        peng = PagedEngine(lm_paged, params, n_slots=args.slots,
+                           max_len=args.max_len, seed=args.seed,
+                           page_size=args.page_size,
+                           decode_block=args.decode_block)
+        results["paged_pallas"], _ = run_engine(peng, prompts, args.max_new,
+                                                args.temperature,
+                                                arrivals=arrivals)
+        results["paged_pallas"]["kv_dtype"] = kv_dtype
+        kvrep = results["kv_cache"]["bf16" if kv_dtype == "bfloat16"
+                                    else kv_dtype]
+        print(f"[bench] paged : "
+              f"{results['paged_pallas']['tokens_per_sec']:8.1f} tok/s  "
+              f"ttft p50 {results['paged_pallas']['ttft_ms']['p50']} ms  "
+              f"syncs {results['paged_pallas']['host_syncs']} "
+              f"({results['paged_pallas']['tokens_per_sync']:.1f} tok/sync)  "
+              f"kv {kv_dtype} pool {kvrep['pool_mib']} MiB "
+              f"({kvrep['max_slots_per_gib']} slots/GiB)")
+
+    # ---- scheduler: one row per policy ----------------------------------
+    policies = [p for p in args.policies.split(",") if p]
+    if policies:
+        from repro.sched import SchedEngine
+        results["sched"] = {}
+        sched_kw = dict(n_slots=args.slots, max_len=args.max_len,
+                        seed=args.seed, page_size=args.page_size,
+                        decode_block=args.decode_block,
+                        prefill_chunk=args.prefill_chunk,
+                        slo_ttft=args.slo_ttft / 1e3,
+                        slo_tpot=args.slo_tpot / 1e3)
+        warm_outs = {}
+        for pol in policies:
+            eng = SchedEngine(lm_paged, params, policy=pol,
+                              prefix_cache=True, **sched_kw)
+            row, outs = run_engine(eng, prompts, args.max_new,
+                                   args.temperature, arrivals=arrivals,
+                                   **slo_kw)
+            results["sched"][pol] = row
+            warm_outs[pol] = (outs, row["sched"])
+            print(f"[bench] sched/{pol:<4}: "
+                  f"{row['tokens_per_sec']:8.1f} tok/s  "
+                  f"ttft p50 {row['ttft_ms']['p50']} ms  "
+                  f"queue p50 {row['queue_wait_ms']['p50']} ms  "
+                  f"slo ttft {row['slo']['ttft_attainment']:.0%}  "
+                  f"preempt {row['sched']['preemptions']}  "
+                  f"prefix hit "
+                  f"{(row['sched']['prefix'] or {}).get('hit_rate', 0):.0%}")
+
+    # warm vs cold prefix-cache comparison (first policy, same trace);
+    # only meaningful on a shared-prefix workload — skipped otherwise
+    if policies and args.shared_prefix > 0:
+        from repro.sched import SchedEngine
+        pol = policies[0]
+        eng = SchedEngine(lm_paged, params, policy=pol,
+                          prefix_cache=False, **sched_kw)
+        cold_row, cold_outs = run_engine(eng, prompts, args.max_new,
+                                         args.temperature,
+                                         arrivals=arrivals, **slo_kw)
+        outs, warm_tele = warm_outs[pol]
+        results["prefix_cache"] = {
+            "policy": pol,
+            "cold_prefill_tokens": cold_row["sched"]["prefill_tokens"],
+            "warm_prefill_tokens": warm_tele["prefill_tokens"],
+            "prefill_reduction": round(
+                cold_row["sched"]["prefill_tokens"]
+                / max(warm_tele["prefill_tokens"], 1), 3),
+            "prefix_hit_tokens": warm_tele["prefix_hit_tokens"],
+            "token_identical": outs == cold_outs,
+        }
+        pc = results["prefix_cache"]
+        print(f"[bench] prefix: cold {pc['cold_prefill_tokens']} -> warm "
+              f"{pc['warm_prefill_tokens']} prefill tokens "
+              f"({pc['prefill_reduction']}x), token-identical: "
+              f"{pc['token_identical']}")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=1))

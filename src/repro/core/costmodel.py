@@ -82,12 +82,61 @@ def _flops_per_token(cfg: ModelConfig, ctx_len: int) -> float:
     return 2.0 * n_act + attn_fl
 
 
+def _peak_flops(cfg: ModelConfig) -> float:
+    """Per-chip peak FLOPs for this config (int8 weights run the MXU at
+    2× bf16 throughput) — the ONE place the rate is defined for both the
+    search-time :func:`predict` and the runtime :func:`service_estimate`."""
+    return HW["peak_flops_bf16"] * (2.0 if cfg.quant == "int8" else 1.0)
+
+
+def _roofline_s(cfg: ModelConfig, tier: HwTier, flops: float,
+                hbm_bytes: float) -> float:
+    """Phase time = max(compute, HBM) across the tier's chips."""
+    return max(flops / (tier.chips * _peak_flops(cfg)),
+               hbm_bytes / (tier.chips * HW["hbm_bw"]))
+
+
+def _decode_collective_s(cfg: ModelConfig, tier: HwTier,
+                         batch: int) -> float:
+    """TP all-reduce per decode step (2 per block, d_model activations);
+    zero on single-chip tiers."""
+    if tier.chips <= 1:
+        return 0.0
+    coll = 2 * cfg.num_layers * batch * cfg.d_model * 2.0 * 2.0
+    return coll / (tier.chips * HW["ici_bw_per_link"] * HW["ici_links"])
+
+
+def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
+                     prompt: int, gen: int) -> Dict[str, float]:
+    """Per-request roofline work estimate for scheduler policies
+    (``repro.sched.policy``): prefill seconds and per-decode-token
+    seconds for ONE request at batch 1 on ``tier`` — the same rooflines
+    as :func:`predict` (shared helpers, ICI decode correction included),
+    reduced to what admission ordering needs.  This is where AE-LLM's
+    cost model steers the *runtime*: shortest-job-first ranks by
+    ``t_total_s`` and deadline-EDF converts it into slack.  Absolute
+    numbers are tier-relative; what matters is the ranking they induce
+    across requests of different prompt/generation lengths."""
+    awbytes = _active_weight_bytes(cfg)
+    kv_tok = _kv_bytes_per_token(cfg)
+    prompt = max(int(prompt), 1)
+    gen = max(int(gen), 0)
+    t_pf = _roofline_s(cfg, tier,
+                       prompt * _flops_per_token(cfg, max(prompt // 2, 1)),
+                       awbytes + prompt * kv_tok)
+    ctx = prompt + max(gen, 1) // 2
+    t_dec = _roofline_s(cfg, tier, _flops_per_token(cfg, ctx),
+                        awbytes + ctx * kv_tok) \
+        + _decode_collective_s(cfg, tier, 1)
+    return {"t_prefill_s": t_pf, "t_decode_tok_s": t_dec,
+            "t_total_s": t_pf + gen * t_dec}
+
+
 def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
             prompt: int = 512, gen: int = 128, batch: int = 1) -> Dict[str, float]:
     cfg = apply_efficiency_config(cfg_base, eff)
     chips = tier.chips
-    peak = HW["peak_flops_bf16"] * (2.0 if cfg.quant == "int8" else 1.0)
-    bw = HW["hbm_bw"]
+    peak = _peak_flops(cfg)
 
     wbytes = _weight_bytes(cfg)
     awbytes = _active_weight_bytes(cfg)
@@ -96,16 +145,14 @@ def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
     # ---- prefill: compute-bound region ------------------------------------
     fl_prefill = batch * prompt * _flops_per_token(cfg, prompt // 2)
     by_prefill = awbytes + batch * prompt * kv_tok
-    t_prefill = max(fl_prefill / (chips * peak), by_prefill / (chips * bw))
+    t_prefill = _roofline_s(cfg, tier, fl_prefill, by_prefill)
 
     # ---- decode: memory-bound region (reads active weights + KV/step) ----
     fl_dec = batch * _flops_per_token(cfg, prompt + gen // 2)
     by_dec = awbytes + batch * (prompt + gen // 2) * kv_tok
-    t_dec = max(fl_dec / (chips * peak), by_dec / (chips * bw))
-    # TP all-reduce per layer in decode (2 per block, d_model activations)
-    if chips > 1:
-        coll = 2 * cfg.num_layers * batch * cfg.d_model * 2.0 * 2.0
-        t_dec += coll / (chips * HW["ici_bw_per_link"] * HW["ici_links"])
+    # + TP all-reduce per layer in decode (2 per block, d_model acts)
+    t_dec = _roofline_s(cfg, tier, fl_dec, by_dec) \
+        + _decode_collective_s(cfg, tier, batch)
     latency = (t_prefill + gen * t_dec) * 1e3                    # ms
 
     # ---- memory high-water -------------------------------------------------

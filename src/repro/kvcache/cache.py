@@ -146,22 +146,31 @@ def _quant_token_write(pages, scales, pidx, off, new):
     page's running amax scale and requantizing the page when it grows.
     pages: (N,page,KH,D); scales: (N,KH); new: (S,KH,D) bf16.
 
+    A write at offset 0 RESETS the page's scale instead of growing it: a
+    page's first token is always written at offset 0 (allocations, lazy
+    growth, and prefill chunks are page-aligned), so this is where a
+    reused page sheds its previous occupant's amax — entirely on device,
+    with no host round trip at admission/retire (the prefill scatter
+    resets its touched pages the same way).
+
     Steady state (no real page's amax grew — after a page's first few
     tokens the running max ratchets flat) takes the O(row) fast path; the
     full-page gather→requantize→rewrite runs only under ``lax.cond`` when
-    a scale actually grows.  Null-page growth is excluded from the
-    predicate: free slots' garbage writes land there and its contents are
-    masked by per-slot lengths, so it never needs requantizing."""
+    a scale actually grows.  Null-page growth and offset-0 resets are
+    excluded from the predicate: their pages hold only garbage beyond the
+    written token, masked by per-slot lengths, so nothing needs
+    requantizing."""
     s_n = pidx.shape[0]
     qmax = _qmax_of(pages.dtype)
     amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1)    # (S,KH)
     old = scales[pidx]                                           # (S,KH)
-    ns = jnp.maximum(old, amax / qmax)
+    fresh = (off == 0)[:, None]                                  # (S,1)
+    ns = jnp.where(fresh, amax / qmax, jnp.maximum(old, amax / qmax))
     tok = quantize_with_scale(new, ns, pages.dtype, axis=-1)     # (S,KH,D)
-    # old == 0 (fresh/reset page) also skips the rescale: its first touch
-    # is at offset 0 and every other position is masked by the slot's
-    # length until overwritten, so stale contents are never dequantized
-    grew = jnp.any((ns > old) & (old > 0) & (pidx != 0)[:, None])
+    # old == 0 (fresh/reset page) also skips the rescale: everything in
+    # the page beyond the written token is masked by the slot's length
+    # until overwritten, so stale contents are never dequantized
+    grew = jnp.any((ns > old) & (old > 0) & ~fresh & (pidx != 0)[:, None])
 
     def rescale_pages(pages):
         pg = pages[pidx]                                         # (S,page,KH,D)
@@ -216,21 +225,34 @@ def _quant_scatter(pages, scales, pidx, off, rows, amax):
 
 def paged_scatter_prefill(cache: dict, slot_ids: jax.Array,
                           lengths: jax.Array, k_rows: jax.Array,
-                          v_rows: jax.Array) -> dict:
+                          v_rows: jax.Array,
+                          starts: jax.Array | None = None) -> dict:
     """Scatter a batched prefill's contiguous K/V into pages.
 
     k_rows/v_rows: (B, T, KVH, D) — row b's tokens [0, lengths[b]) go to
-    slot ``slot_ids[b]``'s pages; padding tokens (and rows with length 0)
-    are routed to the null page.  One scatter per array, no host loop.
+    slot ``slot_ids[b]``'s pages at logical positions ``starts[b] +
+    [0, lengths[b])`` (``starts`` defaults to 0 — classic whole-prompt
+    admission); padding tokens (and rows with length 0) are routed to the
+    null page.  One scatter per array, no host loop.
+
+    Non-zero ``starts`` must be page-aligned: the quantized path resets
+    every touched page's scale to this scatter's amax (a page's scale
+    lifecycle is tied to its first write at offset 0), so a chunk that
+    started mid-page would clobber the previous chunk's scale.  The
+    scheduler's chunked prefill enforces chunk % page_size == 0.
     """
     kp, vp, ks, vs, bt = paged_views(cache)
     b, t = k_rows.shape[:2]
     page = kp.shape[1]
     tpos = jnp.arange(t)[None, :]                                # (1,T)
+    if starts is None:
+        starts = jnp.zeros((b,), jnp.int32)
     valid = tpos < lengths[:, None]                              # (B,T)
-    pidx = bt[slot_ids[:, None], tpos // page]                   # (B,T)
+    apos = starts[:, None] + tpos                                # (B,T)
+    lpage = jnp.minimum(apos // page, bt.shape[1] - 1)           # pad-safe
+    pidx = bt[slot_ids[:, None], lpage]                          # (B,T)
     pidx = jnp.where(valid, pidx, 0)
-    off = jnp.broadcast_to(tpos % page, (b, t))
+    off = jnp.where(valid, apos % page, 0)
     out = dict(cache)
     if ks is None:
         out["k_pages"] = kp.at[pidx, off].set(k_rows.astype(kp.dtype))

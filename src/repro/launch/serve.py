@@ -1,10 +1,16 @@
 """Serving driver: continuous-batching engine over the decode step.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --requests 8 [--paged] [--kv-style gqa] [--quant int8]
+        --requests 8 [--paged] [--kv-style gqa] [--quant int8] \
+        [--policy edf --slo-ttft 2000 --prefix-cache --arrival-rate 4]
 
 ``--smoke`` runs the reduced config on CPU; the Engine + decode step are
 the same objects the dry-run lowers for the production mesh.
+``--policy`` switches to the SLO-aware scheduler (``repro.sched``):
+policy-ordered admission, prefix caching over the paged pools, chunked
+prefill, and preemption with recompute-on-readmit; ``--arrival-rate``
+paces submissions open-loop (Poisson) instead of queueing everything
+upfront.
 """
 from __future__ import annotations
 
@@ -35,6 +41,26 @@ def main(argv=None):
                     help="tokens per host sync in the paged engine")
     ap.add_argument("--page-size", type=int, default=64,
                     help="KV page size for --paged (tokens per page)")
+    ap.add_argument("--policy", default=None,
+                    choices=["fcfs", "sjf", "edf"],
+                    help="serve through the SLO-aware scheduler "
+                         "(repro.sched.SchedEngine) with this admission "
+                         "policy; implies the paged engine")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="refcounted prefix caching over the paged pools "
+                         "(--policy only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="scheduler prefill chunk in tokens (multiple of "
+                         "--page-size; default 4 pages)")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="TTFT SLO target in ms (EDF deadlines + "
+                         "telemetry)")
+    ap.add_argument("--slo-tpot", type=float, default=None,
+                    help="TPOT SLO target in ms (telemetry)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals, requests/sec "
+                         "(0: submit everything upfront)")
     ap.add_argument("--kv-style", default="full",
                     choices=["full", "gqa", "mqa"])
     ap.add_argument("--kv-dtype", default="bf16",
@@ -60,7 +86,20 @@ def main(argv=None):
         params = quantize_tree(params, quant=args.quant)
         print(f"[serve] weights quantized to {args.quant}")
 
-    if args.paged:
+    if args.policy:
+        from repro.sched import SchedEngine
+        eng = SchedEngine(lm, params, n_slots=args.slots,
+                          max_len=args.max_len, seed=args.seed,
+                          page_size=args.page_size,
+                          decode_block=args.decode_block,
+                          policy=args.policy,
+                          prefix_cache=args.prefix_cache,
+                          prefill_chunk=args.prefill_chunk,
+                          slo_ttft=None if args.slo_ttft is None
+                          else args.slo_ttft / 1e3,
+                          slo_tpot=None if args.slo_tpot is None
+                          else args.slo_tpot / 1e3)
+    elif args.paged:
         from repro.serve.engine import PagedEngine
         eng = PagedEngine(lm, params, n_slots=args.slots,
                           max_len=args.max_len, seed=args.seed,
@@ -70,20 +109,35 @@ def main(argv=None):
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
                      seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            (args.prompt_len,)).tolist()
+               for _ in range(args.requests)]
     t0 = time.perf_counter()
-    ids = [eng.submit(rng.integers(0, cfg.vocab_size,
-                                   (args.prompt_len,)).tolist(),
-                      max_new_tokens=args.max_new,
-                      temperature=args.temperature)
-           for _ in range(args.requests)]
-    done = eng.run_to_completion()
+    if args.arrival_rate > 0:
+        from repro.serve.engine import run_open_loop
+        offsets = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                            args.requests))
+        ids = run_open_loop(eng, prompts, offsets,
+                            max_new_tokens=args.max_new,
+                            temperature=args.temperature)
+        done = dict(eng.registry)
+    else:
+        ids = [eng.submit(p, max_new_tokens=args.max_new,
+                          temperature=args.temperature) for p in prompts]
+        done = eng.run_to_completion()
     dt = time.perf_counter() - t0
     n_tok = sum(len(done[i].out_tokens) for i in ids)
-    mode = (f"paged, {eng.sync_count} host syncs" if args.paged
-            else "eager, 1 sync/token")
+    if args.policy:
+        mode = f"sched/{args.policy}, {eng.sync_count} host syncs"
+    elif args.paged:
+        mode = f"paged, {eng.sync_count} host syncs"
+    else:
+        mode = "eager, 1 sync/token"
     print(f"[serve] {cfg.name}: {len(ids)} requests, {n_tok} tokens in "
           f"{dt:.1f}s ({n_tok/dt:.1f} tok/s, continuous batching over "
           f"{args.slots} slots, {mode})")
+    if args.policy:
+        print(f"[serve] sched telemetry: {eng.telemetry()}")
     for i in ids[:3]:
         print(f"  req {i}: {len(done[i].out_tokens)} tokens "
               f"{done[i].out_tokens[:8]}…")

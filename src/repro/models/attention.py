@@ -368,6 +368,90 @@ def attention_prefill(p: dict, x: jax.Array, a: AttentionConfig, cache: dict, *,
     return y, kvcache.prefill_write(cache, {"k": k, "v": v})
 
 
+def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
+                            cache: dict, spos, *,
+                            style: str = "full") -> tuple[jax.Array, dict]:
+    """Chunked / continuation prefill directly against a paged KV cache.
+
+    x: (B, c, d) — one prompt chunk per admitted row; ``spos`` is the
+    triple ``(slot_ids (B,), starts (B,), lengths (B,))``: row b's chunk
+    covers logical positions ``starts[b] .. starts[b]+lengths[b]-1`` of
+    slot ``slot_ids[b]`` (rows right-padded to the common width c).
+
+    The chunk's K/V is written into the slot's pages (quantized pools
+    reset each touched page's scale, so ``starts`` must be page-aligned)
+    and its queries attend over ``[0, starts[b]+i]``: the already-cached
+    prefix is gathered from the pages (dequantized when quantized) while
+    the chunk attends to its own fresh bf16 K/V.  A prefix-cache warm
+    start and a cold chunked run therefore execute the SAME computation
+    for any continuation chunk — that is what makes shared-prefix
+    admission token-identical to a cold cache.  Eager gather reference
+    (one (B, pages·page) context per layer); a fused Pallas chunk-prefill
+    kernel is an open roadmap item.
+    """
+    from repro import kvcache
+    if a.window is not None:
+        raise NotImplementedError("paged prefill: sliding window unsupported")
+    slot_ids, starts, lengths = spos
+    b, c, _ = x.shape
+    kvh = a.kv_heads_effective()
+    kvh_store = cache["k_pages"].shape[2]
+    g = a.heads_padded // kvh_store
+
+    apos = starts[:, None] + jnp.arange(c)[None, :]              # (B,c)
+    q = linear_apply(p["wq"], x).reshape(b, c, a.heads_padded, a.head_dim)
+    k_new = linear_apply(p["wk"], x).reshape(b, c, kvh, a.head_dim)
+    v_new = linear_apply(p["wv"], x).reshape(b, c, kvh, a.head_dim)
+    q = apply_rope(q, apos, a.rope_theta)
+    k_new = apply_rope(k_new, apos, a.rope_theta)
+    k_new = _merge_heads(k_new, kvh_store)
+    v_new = _merge_heads(v_new, kvh_store)
+    # pin the cache-bound k/v to batch sharding before the pool scatter —
+    # same resharding-storm guard as attention_prefill's cache write
+    from repro.sharding.ctx import maybe_constrain
+    k_new = maybe_constrain(k_new, ("pod", "data"), None, None, None)
+    v_new = maybe_constrain(v_new, ("pod", "data"), None, None, None)
+
+    cache = kvcache.paged_scatter_prefill(cache, slot_ids, lengths,
+                                          k_new, v_new, starts)
+
+    # gather the cached prefix (positions < starts[b]; the chunk's own
+    # just-scattered rows are masked out in favour of the fresh values)
+    kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
+    rows = bt[slot_ids]                                          # (B,P)
+    page = kp.shape[1]
+    t = rows.shape[1] * page
+    k_ctx, v_ctx = kp[rows], vp[rows]                # (B,P,page,KH,D)
+    if k_sc is not None:
+        k_ctx = kvcache.dequantize(k_ctx, k_sc[rows][:, :, None, :])
+        v_ctx = kvcache.dequantize(v_ctx, v_sc[rows][:, :, None, :])
+    k_ctx = k_ctx.reshape(b, t, kvh_store, a.head_dim)
+    v_ctx = v_ctx.reshape(b, t, kvh_store, a.head_dim)
+
+    scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
+    qg = q.reshape(b, c, kvh_store, g, a.head_dim).astype(jnp.float32)
+    s_ctx = jnp.einsum("bskgd,btkd->bkgst", qg,
+                       k_ctx.astype(jnp.float32)) * scale
+    ctx_ok = jnp.arange(t)[None, :] < starts[:, None]            # (B,T)
+    s_ctx = jnp.where(ctx_ok[:, None, None, None, :], s_ctx, NEG_INF)
+    s_chk = jnp.einsum("bskgd,btkd->bkgst", qg,
+                       k_new.astype(jnp.float32)) * scale
+    ii = jnp.arange(c)
+    chk_ok = (ii[None, :] <= ii[:, None])[None] \
+        & (ii[None, None, :] < lengths[:, None, None])           # (B,c,c)
+    s_chk = jnp.where(chk_ok[:, None, None], s_chk, NEG_INF)
+
+    probs = jax.nn.softmax(jnp.concatenate([s_ctx, s_chk], axis=-1),
+                           axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", probs[..., :t],
+                   v_ctx.astype(jnp.float32)) \
+        + jnp.einsum("bkgst,btkd->bskgd", probs[..., t:],
+                     v_new.astype(jnp.float32))
+    o = o.reshape(b, c, a.heads_padded * a.head_dim).astype(x.dtype)
+    y = linear_apply(p["wo"], _mask_pad_heads(o, a))
+    return y, cache
+
+
 def _posv(pos: jax.Array, b: int) -> jax.Array:
     """Normalize pos (scalar or (B,)) to a (B,) vector."""
     return jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (b,))

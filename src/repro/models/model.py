@@ -165,6 +165,25 @@ class LM:
             jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), cache
 
+    def prefill_paged(self, params, tokens, cache, slot_ids, starts,
+                      lengths):
+        """Chunked prefill continuation straight into the paged cache:
+        ``tokens`` (B, c) right-padded chunks land at absolute positions
+        ``starts[b] + [0, lengths[b])`` of slot ``slot_ids[b]``; each
+        chunk's queries attend to the slot's cached prefix plus the chunk
+        itself (models/attention.attention_prefill_paged).  Returns
+        logits at each row's last chunk token and the updated cache —
+        the scheduler samples from them only on a prompt's final chunk."""
+        x, cache, _ = self.backbone(params, tokens, mode="prefill",
+                                    cache=cache,
+                                    pos=(slot_ids, starts, lengths),
+                                    train=False)
+        idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1).astype(jnp.int32)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = last.astype(jnp.float32) @ self._head_w(params).astype(
+            jnp.float32)
+        return self._mask_pad_logits(logits[:, 0]), cache
+
     def decode_step(self, params, token, cache, pos):
         """token: (B,) int32; pos: scalar position -> (logits (B,V), cache)."""
         x, cache, _ = self.backbone(params, token[:, None], mode="decode",

@@ -176,9 +176,16 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                                                use_flash=cfg.use_kernels,
                                                **chunk_kw)
             elif mode == "prefill":
-                y, kv = attn_mod.attention_prefill(
-                    blk["attn"], h, a, c["kv"], style=cfg.kv_cache_style,
-                    use_flash=cfg.use_kernels, **chunk_kw)
+                if "k_pages" in c["kv"]:
+                    # chunked/continuation prefill straight into the paged
+                    # pools; pos carries (slot_ids, starts, lengths)
+                    y, kv = attn_mod.attention_prefill_paged(
+                        blk["attn"], h, a, c["kv"], pos,
+                        style=cfg.kv_cache_style)
+                else:
+                    y, kv = attn_mod.attention_prefill(
+                        blk["attn"], h, a, c["kv"], style=cfg.kv_cache_style,
+                        use_flash=cfg.use_kernels, **chunk_kw)
                 nc["kv"] = kv
             else:  # decode
                 from repro.sharding.ctx import current_mesh

@@ -1,0 +1,31 @@
+"""Serving scheduler subsystem layered over ``repro.serve.PagedEngine``.
+
+AE-LLM searches efficiency configurations offline (core/space, nsga2,
+costmodel); this package is where those decisions finally reach the
+serving loop at deployment time:
+
+* ``prefix``    — hash-chain prefix cache over the paged KV pools,
+                  backed by the refcounted ``PageAllocator`` (full pages
+                  are immutable, so shared prompt prefixes map several
+                  block-table rows at the same physical pages and skip
+                  their prefill entirely).
+* ``policy``    — pluggable admission ordering / preemption-victim
+                  selection: FCFS, cost-model shortest-job-first, and
+                  deadline-EDF over per-request TTFT/TPOT SLOs
+                  (``core.costmodel.service_estimate``).
+* ``scheduler`` — ``SchedEngine``: chunked prefill interleaved with
+                  decode blocks, lazy page growth instead of
+                  full-horizon reservation, preemption with
+                  recompute-on-readmit, and telemetry (queue wait, SLO
+                  attainment, prefix hit rate, preemption count).
+"""
+from repro.sched.policy import (DEFAULT_TTFT_S, EDF, FCFS, SJF, Policy,
+                                make_policy)
+from repro.sched.prefix import PrefixCache
+from repro.sched.scheduler import SchedEngine, SchedStats
+
+__all__ = [
+    "DEFAULT_TTFT_S",
+    "Policy", "FCFS", "SJF", "EDF", "make_policy",
+    "PrefixCache", "SchedEngine", "SchedStats",
+]

@@ -1,0 +1,108 @@
+"""Admission-ordering / preemption-victim policies for the scheduler.
+
+A policy answers two questions with one comparable key each:
+
+* ``priority(req, now)``  — who is admitted next (SMALLEST first);
+* ``victim(req, now)``    — who is preempted first when pages run out
+                            (LARGEST first; default: the inverse of
+                            admission priority, i.e. evict whoever you
+                            would admit last).
+
+``FCFS`` reproduces the base engine's arrival order.  ``SJF`` ranks by
+the cost model's predicted remaining service time
+(``core.costmodel.service_estimate`` — AE-LLM's roofline estimates
+steering the runtime, not just the offline config search).  ``EDF``
+(earliest deadline first) converts each request's TTFT SLO into a
+deadline and admits the most urgent request first; its preemption victim
+is the request with the most slack.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+#: EDF's deadline fallback (seconds) when neither the request nor the
+#: engine supplies a TTFT target; tier-relative like every latency here.
+DEFAULT_TTFT_S = 0.5
+
+
+def _gen_len(req) -> int:
+    return len(req.out_tokens)
+
+
+def _remaining_prefill(req) -> int:
+    """Prompt (+ recompute-on-readmit) tokens not yet cached."""
+    total = len(req.prompt) + max(_gen_len(req) - 1, 0)
+    return max(total - req.progress, 0)
+
+
+class Policy:
+    """FCFS: admission by arrival; preempt the latest arrival."""
+
+    name = "fcfs"
+
+    def priority(self, req, now: float):
+        return (req.t_submit, req.rid)
+
+    def victim(self, req, now: float):
+        return self.priority(req, now)
+
+
+class FCFS(Policy):
+    pass
+
+
+class SJF(Policy):
+    """Cost-model-predicted shortest-job-first: rank by estimated
+    remaining service seconds (prefill roofline for uncached tokens +
+    per-token decode for the unGenerated budget)."""
+
+    name = "sjf"
+
+    def __init__(self, cfg, tier: str = "v5e-1"):
+        from repro.core.costmodel import TIERS
+        self.cfg = cfg
+        self.tier = TIERS[tier] if isinstance(tier, str) else tier
+
+    def remaining_s(self, req) -> float:
+        from repro.core.costmodel import service_estimate
+        rem_gen = max(req.max_new_tokens - _gen_len(req), 0)
+        est = service_estimate(self.cfg, self.tier,
+                               prompt=max(_remaining_prefill(req), 1),
+                               gen=rem_gen)
+        return est["t_total_s"]
+
+    def priority(self, req, now: float):
+        return (self.remaining_s(req), req.rid)
+
+
+class EDF(Policy):
+    """Earliest-deadline-first on the TTFT SLO: deadline = submit time +
+    the request's TTFT target (engine/policy default when unset).  The
+    preemption victim is the request with the LATEST deadline — the one
+    that can best afford a recompute."""
+
+    name = "edf"
+
+    def __init__(self, slo_ttft: Optional[float] = None):
+        self.slo_ttft = slo_ttft if slo_ttft is not None else DEFAULT_TTFT_S
+
+    def deadline(self, req) -> float:
+        slo = req.slo_ttft if req.slo_ttft is not None else self.slo_ttft
+        return req.t_submit + slo
+
+    def priority(self, req, now: float):
+        return (self.deadline(req), req.rid)
+
+
+def make_policy(name: str, *, cfg=None, tier: str = "v5e-1",
+                slo_ttft: Optional[float] = None) -> Policy:
+    name = name.lower()
+    if name == "fcfs":
+        return FCFS()
+    if name == "sjf":
+        if cfg is None:
+            raise ValueError("sjf needs the model config for cost estimates")
+        return SJF(cfg, tier)
+    if name == "edf":
+        return EDF(slo_ttft)
+    raise ValueError(f"unknown policy {name!r} (fcfs | sjf | edf)")

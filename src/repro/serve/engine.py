@@ -48,8 +48,15 @@ class Request:
     pos: int = 0                       # next position to write
     done: bool = False
     t_submit: float = 0.0
+    t_admit: Optional[float] = None    # first slot grant (queue wait end)
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    # --- scheduler surface (repro.sched; inert under the base engines) ---
+    slo_ttft: Optional[float] = None   # per-request TTFT target, seconds
+    slo_tpot: Optional[float] = None   # per-request TPOT target, seconds
+    prefix_hit_tokens: int = 0         # prompt tokens served from cache
+    preemptions: int = 0
+    progress: int = 0                  # prefill tokens already cached
 
 
 class _EngineBase:
@@ -138,6 +145,7 @@ class Engine(_EngineBase):
             req = self.queue.popleft()
             slot = self.free.popleft()
             req.slot = slot
+            req.t_admit = time.perf_counter()
             plen = len(req.prompt)
             logits, self.cache = self._prefill_one(
                 self.params, self.cache, jnp.asarray(req.prompt),
@@ -187,6 +195,38 @@ class Engine(_EngineBase):
                 del self.active[slot]
                 self.free.append(slot)
         return emitted
+
+
+# ---------------------------------------------------------------------------
+# Open-loop driving (shared by launch/serve and the benchmark)
+
+
+def engine_busy(eng) -> bool:
+    """True while the engine has queued or in-flight work (including a
+    scheduler's mid-prefill slots)."""
+    return bool(eng.queue or eng.active or getattr(eng, "_prefilling",
+                                                   None))
+
+
+def run_open_loop(eng, prompts, offsets, **submit_kw):
+    """Submit ``prompts[i]`` at wall-clock offset ``offsets[i]`` seconds
+    from now (open-loop arrivals), stepping the engine between arrivals
+    and sleeping only when it is idle.  Returns the request ids in
+    prompt order; drive results out of ``eng.registry``."""
+    t0 = time.perf_counter()
+    pending = sorted(zip(offsets, range(len(prompts))))
+    ids: List[Optional[int]] = [None] * len(prompts)
+    while pending or engine_busy(eng):
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            _, i = pending.pop(0)
+            ids[i] = eng.submit(prompts[i], **submit_kw)
+        if not engine_busy(eng):
+            if pending:
+                time.sleep(min(pending[0][0] - now, 0.005))
+            continue
+        eng.step()
+    return ids
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +376,7 @@ class PagedEngine(_EngineBase):
             self.queue.popleft()
             self.free.popleft()
             req.slot = slot
+            req.t_admit = time.perf_counter()
             admitted.append(req)
         return admitted
 

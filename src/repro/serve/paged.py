@@ -39,11 +39,19 @@ class OutOfPagesError(RuntimeError):
 
 
 class PageAllocator:
-    """Host-side page accounting: a free list + a host block table.
+    """Host-side page accounting: refcounted pages + a host block table.
 
     Device arrays (the page pools, the device block table inside the
     engine cache) are owned elsewhere; this class only decides WHICH
     physical pages a slot owns.  Page 0 is reserved as the null page.
+
+    Pages carry a reference count so one physical page can back several
+    block-table rows at once: full pages are immutable (writes only ever
+    land past a slot's length), so a shared prompt prefix can be mapped
+    into every slot that carries it (``assign`` with ``shared``), and the
+    prefix cache (``repro.sched.prefix``) can keep pages alive after
+    their slot retires (``ref``/``unref``).  A page returns to the free
+    list exactly when its last reference drops.
     """
 
     def __init__(self, n_pages: int, max_pages_per_slot: int, n_slots: int):
@@ -51,34 +59,82 @@ class PageAllocator:
         self.max_pages_per_slot = max_pages_per_slot
         self.free: List[int] = list(range(n_pages - 1, 0, -1))
         self.table = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self.refs = np.zeros((n_pages,), np.int32)
         self._owned: Dict[int, List[int]] = {}
 
     def pages_needed(self, seq_len: int, page_size: int = PAGE) -> int:
         return (seq_len + page_size - 1) // page_size
 
+    def _take(self, need: int) -> List[int]:
+        if need > len(self.free):
+            raise OutOfPagesError(
+                f"need {need} pages, {len(self.free)} free")
+        return [self.free.pop() for _ in range(need)]
+
     def alloc(self, slot: int, need: int) -> List[int]:
-        """Reserve ``need`` pages for ``slot``.  Atomic: on failure the
-        free list is left exactly as it was and OutOfPagesError raised."""
+        """Reserve ``need`` fresh pages for ``slot``.  Atomic: on failure
+        the free list is left exactly as it was and OutOfPagesError
+        raised."""
+        return self.assign(slot, (), need)
+
+    def assign(self, slot: int, shared, need: int) -> List[int]:
+        """Give ``slot`` the already-allocated pages ``shared`` (each
+        gains a reference — the prefix-cache hit path) followed by
+        ``need`` fresh pages.  Atomic like :meth:`alloc`."""
         if self._owned.get(slot):
             raise OutOfPagesError(f"slot {slot} already holds pages")
-        if need > self.max_pages_per_slot:
+        total = len(shared) + need
+        if total > self.max_pages_per_slot:
             raise OutOfPagesError(
-                f"need {need} pages > {self.max_pages_per_slot} per slot")
-        pages: List[int] = []
-        try:
-            for _ in range(need):
-                pages.append(self.free.pop())
-        except IndexError:
-            self.free.extend(reversed(pages))       # roll back partial pops
-            raise OutOfPagesError(
-                f"need {need} pages, {len(self.free)} free") from None
+                f"need {total} pages > {self.max_pages_per_slot} per slot")
+        fresh = self._take(need)
+        for p in shared:
+            self.refs[p] += 1
+        for p in fresh:
+            self.refs[p] = 1
+        pages = list(shared) + fresh
         self.table[slot, :] = 0
-        self.table[slot, :need] = pages
+        self.table[slot, :total] = pages
         self._owned[slot] = pages
         return pages
 
+    def extend(self, slot: int, extra: int) -> List[int]:
+        """Lazily grow ``slot``'s allocation by ``extra`` fresh pages
+        (appended to its block-table row).  Atomic."""
+        owned = self._owned.get(slot)
+        if owned is None:
+            raise OutOfPagesError(f"slot {slot} owns no pages")
+        n0 = len(owned)
+        if n0 + extra > self.max_pages_per_slot:
+            raise OutOfPagesError(
+                f"{n0}+{extra} pages > {self.max_pages_per_slot} per slot")
+        fresh = self._take(extra)
+        for p in fresh:
+            self.refs[p] = 1
+        self.table[slot, n0:n0 + extra] = fresh
+        owned.extend(fresh)
+        return fresh
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    def ref(self, page: int) -> None:
+        """Take an extra reference on an allocated page (prefix cache)."""
+        if self.refs[page] <= 0:
+            raise ValueError(f"ref on unallocated page {page}")
+        self.refs[page] += 1
+
+    def unref(self, page: int) -> None:
+        """Drop a reference; the page frees when the count hits zero."""
+        if self.refs[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self.free.append(page)
+
     def release(self, slot: int) -> None:
-        self.free.extend(self._owned.pop(slot, []))
+        for p in self._owned.pop(slot, ()):
+            self.unref(p)
         self.table[slot, :] = 0
 
 
@@ -140,17 +196,20 @@ class PagedKVPool:
 # Engine-facing cache-tree walkers (device ops themselves: repro.kvcache)
 
 
-def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths):
+def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths,
+                          starts=None):
     """Scatter a whole model's batched-prefill cache into the paged cache.
 
     Walks the two cache pytrees in parallel; every paged attention node
     ({k_pages, v_pages[, scales], block_table}) receives the matching
     contiguous node's rows via ``repro.kvcache.paged_scatter_prefill``
-    (vmapped over the stacked-groups axis when cfg.scan_layers).  Staging
-    caches are expected bf16; a quantized staging node is dequantized
-    before the scatter re-quantizes per page.  Position-free state nodes
-    (SSM, cross-attn) are not supported — the paged engine gates on
-    attention-only models.
+    (vmapped over the stacked-groups axis when cfg.scan_layers).
+    ``starts`` (B,) offsets each row's logical write positions (chunked
+    prefill continuation; must be page-aligned — see the kvcache
+    docstring).  Staging caches are expected bf16; a quantized staging
+    node is dequantized before the scatter re-quantizes per page.
+    Position-free state nodes (SSM, cross-attn) are not supported — the
+    paged engine gates on attention-only models.
     """
     if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
         k_rows, v_rows = contig_cache["k"], contig_cache["v"]
@@ -159,38 +218,36 @@ def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths):
             v_rows = dequantize(v_rows, contig_cache["v_scale"])
         if paged_cache["k_pages"].ndim == 5:   # (G, N, page, KH, D) stacked
             return jax.vmap(paged_scatter_prefill,
-                            in_axes=(0, None, None, 0, 0))(
-                paged_cache, slot_ids, lengths, k_rows, v_rows)
+                            in_axes=(0, None, None, 0, 0, None))(
+                paged_cache, slot_ids, lengths, k_rows, v_rows, starts)
         return paged_scatter_prefill(paged_cache, slot_ids, lengths,
-                                     k_rows, v_rows)
+                                     k_rows, v_rows, starts)
     if isinstance(paged_cache, dict):
         return {k: scatter_prefill_cache(paged_cache[k], contig_cache[k],
-                                         slot_ids, lengths)
+                                         slot_ids, lengths, starts)
                 for k in paged_cache}
     raise NotImplementedError(
         f"paged engine: unsupported cache leaf {type(paged_cache)}")
 
 
 def set_block_table_rows(cache, slots, rows):
-    """Push host block-table rows into every layer's device block table,
-    and reset the per-page scales of the rows' pages (quantized pools):
-    a page's scale lifecycle is tied to its allocation, so stale amax
-    from a released slot never lingers into the next occupant.
-    slots: (n,) slot indices; rows: (n, pages_per_slot) int32."""
+    """Push host block-table rows into every layer's device block table.
+    slots: (n,) slot indices; rows: (n, pages_per_slot) int32.
+
+    Per-page scales are deliberately NOT touched: a quantized page's
+    scale lifecycle is tied to its first device write — the prefill
+    scatter resets every page it touches, and a decode write at page
+    offset 0 resets the page it opens (``repro.kvcache``) — so slot
+    (re)allocation needs no host round trip over the scale tensors, and
+    shared prefix pages mapped into several rows keep their scales."""
     slots = jnp.asarray(slots, jnp.int32)
     rows = jnp.asarray(rows, jnp.int32)
-    pages = rows.reshape(-1)                   # incl. 0s: null page harmless
 
     def leaf(path, l):
-        ks = jax.tree_util.keystr(path)
-        if "block_table" in ks:
+        if "block_table" in jax.tree_util.keystr(path):
             if l.ndim == 3:                    # (G, S, P) stacked groups
                 return l.at[:, slots, :].set(rows[None])
             return l.at[slots].set(rows)
-        if "k_scales" in ks or "v_scales" in ks:
-            if l.ndim == 3:                    # (G, N, KH) stacked groups
-                return l.at[:, pages].set(0.0)
-            return l.at[pages].set(0.0)
         return l
 
     return jax.tree_util.tree_map_with_path(leaf, cache)
