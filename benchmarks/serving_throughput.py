@@ -20,6 +20,13 @@ JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``):
 * ``prefix_cache`` — warm vs cold comparison on the shared-prefix
   workload: prefill tokens computed with the prefix cache on/off, their
   ratio, and whether greedy outputs were token-identical.
+* ``spec_decoding`` (``--spec ngram|draft``) — SpecEngine vs the
+  non-speculative scheduler on the same trace: measured draft
+  acceptance rate, accepted drafts and tokens per slot-step, verify /
+  fallback round counts, spec-vs-baseline TPOT p50, and greedy
+  token-identity (the rollback-exactness check; ``--repetitive N``
+  tiles an N-token pattern per prompt — the workload where the n-gram
+  drafter wins).  CI writes this to ``BENCH_spec_decoding.json``.
 
 Latency accounting: TTFT is measured from ``submit()`` (arrival), NOT
 from admission — under load the queue wait is the scheduler's doing and
@@ -195,6 +202,18 @@ def main(argv=None):
                          "(0: closed loop, submit everything upfront)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="scheduler prefill chunk tokens (page multiple)")
+    # ---- speculative decoding (repro.spec) ------------------------------
+    ap.add_argument("--spec", default="none",
+                    choices=["none", "ngram", "draft"],
+                    help="benchmark SpecEngine with this drafter against "
+                         "the (non-speculative) scheduler baseline; "
+                         "'draft' self-speculates (target model drafts "
+                         "for itself — the acceptance upper bound)")
+    ap.add_argument("--draft-k", type=int, default=6,
+                    help="max draft tokens per verify round")
+    ap.add_argument("--repetitive", type=int, default=0,
+                    help="build prompts by tiling an N-token pattern "
+                         "(the workload where n-gram drafting wins)")
     ap.add_argument("--slo-ttft", type=float, default=2000.0,
                     help="TTFT SLO target, ms (tier-relative)")
     ap.add_argument("--slo-tpot", type=float, default=500.0,
@@ -219,10 +238,20 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
                           (args.shared_prefix,)).tolist()
-    prompts = [shared + rng.integers(
-        0, cfg.vocab_size,
-        (int(rng.integers(4, args.prompt_len + 1)),)).tolist()
-        for _ in range(args.requests)]
+    if args.repetitive > 0:
+        # repetitive workload (retrieval/code-like): each prompt tiles
+        # its own small pattern, so trailing n-grams recur and the
+        # prompt-lookup drafter has something to propose
+        def one_prompt():
+            n = int(rng.integers(4, args.prompt_len + 1))
+            pat = rng.integers(0, cfg.vocab_size,
+                               (args.repetitive,)).tolist()
+            return (pat * (n // len(pat) + 1))[:n]
+    else:
+        def one_prompt():
+            n = int(rng.integers(4, args.prompt_len + 1))
+            return rng.integers(0, cfg.vocab_size, (n,)).tolist()
+    prompts = [shared + one_prompt() for _ in range(args.requests)]
     arrivals = None
     if args.arrival_rate > 0:
         arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
@@ -330,6 +359,63 @@ def main(argv=None):
               f"{pc['warm_prefill_tokens']} prefill tokens "
               f"({pc['prefill_reduction']}x), token-identical: "
               f"{pc['token_identical']}")
+
+    # ---- speculative decoding: SpecEngine vs the scheduler baseline -----
+    # (same trace, same policy; greedy spec output must be token-identical
+    # to the non-speculative baseline — rollback exactness end to end)
+    if args.spec != "none":
+        from repro.sched import SchedEngine
+        from repro.spec import SpecEngine
+        pol = policies[0] if policies else "fcfs"
+        base_kw = dict(n_slots=args.slots, max_len=args.max_len,
+                       seed=args.seed, page_size=args.page_size,
+                       decode_block=args.decode_block,
+                       prefill_chunk=args.prefill_chunk,
+                       policy=pol, prefix_cache=True)
+        if "sched" in results and pol in results["sched"]:
+            base_row = results["sched"][pol]
+            base_outs = warm_outs[pol][0]
+        else:
+            eng = SchedEngine(lm_paged, params, **base_kw)
+            base_row, base_outs = run_engine(eng, prompts, args.max_new,
+                                             args.temperature,
+                                             arrivals=arrivals)
+        draft_kw = {}
+        if args.spec == "draft":
+            draft_kw = dict(draft_lm=lm_paged, draft_params=params)
+        seng = SpecEngine(lm_paged, params, spec=args.spec,
+                          draft_k=args.draft_k, **base_kw, **draft_kw)
+        spec_row, spec_outs = run_engine(seng, prompts, args.max_new,
+                                         args.temperature,
+                                         arrivals=arrivals)
+        tele = seng.telemetry()["spec"]
+        base_tpot = base_row["tpot_ms"]["p50"]
+        spec_tpot = spec_row["tpot_ms"]["p50"]
+        results["spec_decoding"] = {
+            "arm": args.spec,
+            "draft_k": args.draft_k,
+            "policy": pol,
+            "repetitive": args.repetitive,
+            "acceptance_rate": tele["acceptance_rate"],
+            "accepted_per_step": tele["accepted_per_step"],
+            "tokens_per_step": tele["tokens_per_step"],
+            "verify_steps": tele["verify_steps"],
+            "fallback_steps": tele["fallback_steps"],
+            "baseline_tpot_ms_p50": base_tpot,
+            "spec_tpot_ms_p50": spec_tpot,
+            "tpot_speedup": (round(base_tpot / spec_tpot, 3)
+                             if base_tpot and spec_tpot else None),
+            "baseline_tokens_per_sec": base_row["tokens_per_sec"],
+            "spec_tokens_per_sec": spec_row["tokens_per_sec"],
+            "token_identical": (spec_outs == base_outs
+                                if args.temperature <= 0 else None),
+        }
+        sp = results["spec_decoding"]
+        print(f"[bench] spec/{args.spec}: accept "
+              f"{sp['acceptance_rate']}  {sp['accepted_per_step']} "
+              f"accepted/step  {sp['tokens_per_step']} tok/step  tpot "
+              f"{sp['baseline_tpot_ms_p50']} -> {sp['spec_tpot_ms_p50']} "
+              f"ms  token-identical: {sp['token_identical']}")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=1))

@@ -173,6 +173,10 @@ class ModelConfig:
     kv_cache_style: str = "full"      # full | gqa | mqa (AE-LLM c_inf arm)
     quant: str = "bf16"               # bf16 | fp8 | int8 | int4  (weights)
     quant_method: str = "none"        # none | gptq | awq | smoothquant
+    # speculative decoding (repro.spec; AE-LLM c_inf "spec" arm):
+    # none | ngram (model-free prompt lookup) | draft (small draft LM)
+    spec_decode: str = "none"
+    spec_draft_k: int = 4             # max draft tokens per verify round
 
     # ------------------------------------------------------------------
     def with_(self, **kw) -> "ModelConfig":

@@ -68,6 +68,10 @@ def apply_efficiency_config(cfg: ModelConfig,
         else "full",
         kv_cache_dtype={"int8": "int8", "int4": "int8",
                         "fp8": "fp8"}.get(eff.inf.quant, "bfloat16"),
+        # speculative decoding rides the paged serving path only; SSM
+        # families have no paged engine, so the arm is a no-op there
+        spec_decode=(eff.inf.spec if out.attention is not None else "none"),
+        spec_draft_k=eff.inf.draft_k,
     )
     return out
 

@@ -49,6 +49,45 @@ TIERS["high_perf"] = TIERS["v5e-256"]
 
 BYTES = {"bf16": 2.0, "fp8": 1.0, "int8": 1.0, "int4": 0.5}
 
+# --- speculative decoding (repro.spec; c_inf "spec" arm) -------------------
+# Workload-prior acceptance rates per drafter arm — the quantity AE-LLM's
+# search navigates: acceptance is task-dependent (repetitive/retrieval
+# text accepts most drafts, free-form text few), so the offline predictor
+# needs a prior while the runtime controller measures the real rate.
+SPEC_ACCEPT_RATE = {"none": 0.0, "ngram": 0.35, "draft": 0.6}
+# Cost of proposing ONE draft token, as a fraction of a target decode
+# step: ngram lookup is host-side (~free); a small draft LM costs a
+# shrunken forward pass.
+SPEC_DRAFT_COST = {"none": 0.0, "ngram": 0.02, "draft": 0.15}
+# Marginal cost of verifying one extra query position in the fused
+# multi-query verify dispatch: decode is HBM-bound (weights + KV reads
+# amortize over the K queries), so the verify step is nearly flat in K.
+SPEC_VERIFY_OVERHEAD = 0.03
+
+
+def spec_tokens_per_step(accept_rate: float, k: int) -> float:
+    """Expected tokens emitted per verify round with ``k`` draft tokens
+    at per-token acceptance ``accept_rate`` (independence assumption):
+    1 + a + a^2 + ... + a^k = (1 - a^(k+1)) / (1 - a).  The "+1" is the
+    correction/bonus token the target model always contributes."""
+    a = min(max(accept_rate, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def spec_speedup(accept_rate: float, k: int, *,
+                 draft_cost: float = 0.05,
+                 verify_overhead: float = SPEC_VERIFY_OVERHEAD) -> float:
+    """Modeled decode speedup of k-token speculation over plain decode:
+    expected tokens per round divided by the round's cost in decode-step
+    units (1 verify + k draft proposals + the multi-query widening).
+    ``k = 0`` is exactly 1.0 (plain decode)."""
+    if k <= 0:
+        return 1.0
+    e = spec_tokens_per_step(accept_rate, k)
+    return e / (1.0 + verify_overhead * k + draft_cost * k)
+
 
 def _weight_bytes(cfg: ModelConfig) -> float:
     return cfg.param_count() * BYTES.get(cfg.quant, 2.0)
@@ -133,7 +172,8 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
 
 
 def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
-            prompt: int = 512, gen: int = 128, batch: int = 1) -> Dict[str, float]:
+            prompt: int = 512, gen: int = 128, batch: int = 1,
+            spec_accept_rate: float = None) -> Dict[str, float]:
     cfg = apply_efficiency_config(cfg_base, eff)
     chips = tier.chips
     peak = _peak_flops(cfg)
@@ -153,6 +193,24 @@ def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
     # + TP all-reduce per layer in decode (2 per block, d_model acts)
     t_dec = _roofline_s(cfg, tier, fl_dec, by_dec) \
         + _decode_collective_s(cfg, tier, batch)
+
+    # ---- speculative decoding (c_inf spec arm; repro.spec) ---------------
+    # One verify round scores k+1 query positions in a single dispatch:
+    # (k+1)x the decode FLOPs but the SAME HBM bytes (weights + KV are
+    # read once) — cheap precisely in the memory-bound decode regime —
+    # and emits E[a,k] = (1-a^(k+1))/(1-a) tokens, so effective
+    # per-token decode time divides by the expected haul.
+    spec = getattr(cfg, "spec_decode", "none")
+    if spec != "none" and gen > 0:
+        k = cfg.spec_draft_k
+        a = (SPEC_ACCEPT_RATE.get(spec, 0.0) if spec_accept_rate is None
+             else spec_accept_rate)
+        fl_ver = (k + 1) * fl_dec
+        t_ver = _roofline_s(cfg, tier, fl_ver, by_dec) \
+            + _decode_collective_s(cfg, tier, batch)
+        t_round = t_ver + k * SPEC_DRAFT_COST.get(spec, 0.05) * t_dec
+        t_dec = t_round / spec_tokens_per_step(a, k)
+
     latency = (t_prefill + gen * t_dec) * 1e3                    # ms
 
     # ---- memory high-water -------------------------------------------------

@@ -22,9 +22,9 @@ from repro.core.pareto import (ParetoArchive, crowding_distance,
                                non_dominated_sort, to_min)
 from repro.core.space import (ATTENTION_KINDS, FT_ALPHA_MULT, FT_METHODS,
                               FT_RANKS, KV_STYLES, MOE_EXPERTS, MOE_TOPK,
-                              QUANT_METHODS, QUANTS, ArchChoice,
-                              EfficiencyConfig, FtChoice, InfChoice,
-                              SpaceMask, sample_config)
+                              QUANT_METHODS, QUANTS, SPEC_ARMS,
+                              SPEC_DRAFT_KS, ArchChoice, EfficiencyConfig,
+                              FtChoice, InfChoice, SpaceMask, sample_config)
 
 P_MUT = {"arch": 0.1, "ft": 0.2, "inf": 0.15}      # Eq. 8
 P_CROSS = 0.9
@@ -62,15 +62,25 @@ def _mutate_ft(f: FtChoice, rng) -> FtChoice:
 
 
 def _mutate_inf(i: InfChoice, rng, mask: SpaceMask) -> InfChoice:
-    field = rng.integers(0, 3)
+    field = rng.integers(0, 4)
     if field == 0:
         return dataclasses.replace(i, quant=str(rng.choice(QUANTS)))
     if field == 1:
         return dataclasses.replace(i,
                                    quant_method=str(rng.choice(QUANT_METHODS)))
-    if mask.kv_arms:
-        return dataclasses.replace(i, kv_style=str(rng.choice(KV_STYLES)))
-    return i
+    if field == 2:
+        if mask.kv_arms:
+            return dataclasses.replace(i, kv_style=str(rng.choice(KV_STYLES)))
+        return i
+    # spec arm rides the paged (attention) serving path; same mask as kv
+    if not mask.kv_arms:
+        return i
+    sp = str(rng.choice(SPEC_ARMS))
+    # canonicalize the none arm's draft_k (matches enumerate/sample) so
+    # semantically identical configs dedupe in the tuner/archive
+    return dataclasses.replace(
+        i, spec=sp, draft_k=SPEC_DRAFT_KS[1] if sp == "none"
+        else int(rng.choice(SPEC_DRAFT_KS)))
 
 
 def mutate(c: EfficiencyConfig, rng,

@@ -29,6 +29,11 @@ FT_ALPHA_MULT = [1, 2, 4]
 QUANTS = ["bf16", "fp8", "int8", "int4"]
 QUANT_METHODS = ["gptq", "awq", "smoothquant"]
 KV_STYLES = ["full", "gqa", "mqa"]
+# speculative decoding (repro.spec): drafter arm × max draft length.
+# Acceptance rate is workload-dependent (the very thing the adaptive
+# search navigates) — the cost model carries per-arm priors.
+SPEC_ARMS = ["none", "ngram", "draft"]
+SPEC_DRAFT_KS = [2, 4, 8]
 
 
 @dataclass(frozen=True)
@@ -50,6 +55,8 @@ class InfChoice:
     quant: str = "bf16"
     quant_method: str = "gptq"        # ignored when quant == bf16
     kv_style: str = "full"
+    spec: str = "none"                # none | ngram | draft (repro.spec)
+    draft_k: int = 4                  # ignored when spec == "none"
 
 
 @dataclass(frozen=True)
@@ -97,9 +104,18 @@ def enumerate_space(mask: SpaceMask = SpaceMask()) -> List[EfficiencyConfig]:
             FtChoice(m, r, am) for m, r, am in itertools.product(
                 FT_METHODS[1:], FT_RANKS, FT_ALPHA_MULT)]
         for ft in fts:
-            infs = [InfChoice("bf16", "gptq", kv) for kv in kvs] + [
-                InfChoice(q, qm, kv) for q, qm, kv in itertools.product(
-                    QUANTS[1:], QUANT_METHODS, kvs)]
+            # spec rides the paged (attention) serving path — masked out
+            # with the kv arms for families without one (ssm)
+            specs = [("none", SPEC_DRAFT_KS[1])]
+            if mask.kv_arms:
+                specs += [(s, k) for s, k in itertools.product(
+                    SPEC_ARMS[1:], SPEC_DRAFT_KS)]
+            infs = [InfChoice("bf16", "gptq", kv, sp, dk)
+                    for kv in kvs for sp, dk in specs] + [
+                InfChoice(q, qm, kv, sp, dk)
+                for q, qm, kv in itertools.product(
+                    QUANTS[1:], QUANT_METHODS, kvs)
+                for sp, dk in specs]
             for inf in infs:
                 out.append(EfficiencyConfig(arch, ft, inf))
     return out
@@ -111,7 +127,9 @@ def space_size(mask: SpaceMask = SpaceMask()) -> int:
     moe = 1 + (len(MOE_EXPERTS) - 1) * len(MOE_TOPK) if mask.moe_arms else 1
     ft = 1 + (len(FT_METHODS) - 1) * len(FT_RANKS) * len(FT_ALPHA_MULT)
     kv = len(KV_STYLES) if mask.kv_arms else 1
-    inf = kv * (1 + (len(QUANTS) - 1) * len(QUANT_METHODS))
+    spec = 1 + (len(SPEC_ARMS) - 1) * len(SPEC_DRAFT_KS) \
+        if mask.kv_arms else 1
+    inf = kv * spec * (1 + (len(QUANTS) - 1) * len(QUANT_METHODS))
     return attns * moe * ft * inf
 
 
@@ -126,7 +144,10 @@ def sample_config(rng: np.random.Generator,
     ft = FtChoice(m, 0 if m == "full" else int(rng.choice(FT_RANKS)),
                   1 if m == "full" else int(rng.choice(FT_ALPHA_MULT)))
     q = str(rng.choice(QUANTS))
-    inf = InfChoice(q, str(rng.choice(QUANT_METHODS)), str(rng.choice(kvs)))
+    sp = str(rng.choice(SPEC_ARMS)) if mask.kv_arms else "none"
+    inf = InfChoice(q, str(rng.choice(QUANT_METHODS)), str(rng.choice(kvs)),
+                    sp, SPEC_DRAFT_KS[1] if sp == "none"
+                    else int(rng.choice(SPEC_DRAFT_KS)))
     return EfficiencyConfig(arch, ft, inf)
 
 
@@ -149,6 +170,8 @@ def encode_config(c: EfficiencyConfig) -> list:
     f += _onehot(c.inf.quant, QUANTS)
     f += _onehot(c.inf.quant_method, QUANT_METHODS)
     f += _onehot(c.inf.kv_style, KV_STYLES)
+    f += _onehot(c.inf.spec, SPEC_ARMS)
+    f += [float(c.inf.draft_k) if c.inf.spec != "none" else 0.0]
     return f
 
 

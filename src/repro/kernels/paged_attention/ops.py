@@ -11,11 +11,33 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_verify_attention_ref)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def paged_verify_attention(q, k_pages, v_pages, block_table, lengths,
+                           chunk_k, chunk_v, widths,
+                           k_scales: Optional[jax.Array] = None,
+                           v_scales: Optional[jax.Array] = None, *,
+                           use_kernel: bool = True) -> jax.Array:
+    """Speculative-verify attention: q (S,W,H,D) queries at logical
+    positions ``lengths[s] + [0, W)`` against the paged prefix plus the
+    chunk's own fresh K/V (``chunk_k``/``chunk_v`` (S,W,KH,D), causal up
+    to ``widths[s]``) -> (S,W,H,D).  One dispatch scores all W draft
+    positions — the multi-query extension of :func:`paged_attention`."""
+    if use_kernel:
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_verify_attention_pallas)
+        return paged_verify_attention_pallas(
+            q, k_pages, v_pages, block_table, lengths, chunk_k, chunk_v,
+            widths, k_scales, v_scales, interpret=not _on_tpu())
+    return paged_verify_attention_ref(q, k_pages, v_pages, block_table,
+                                      lengths, chunk_k, chunk_v, widths,
+                                      k_scales, v_scales)
 
 
 def paged_attention(q, k_pages, v_pages, block_table, lengths,

@@ -101,6 +101,149 @@ def _paged_kernel(*refs, scale: float, page_size: int, n_page_blocks: int,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _verify_kernel(*refs, scale: float, page_size: int, n_page_blocks: int,
+                   group: int, width: int, quantized: bool):
+    """Speculative-verify variant: W query positions per slot.  Grid =
+    (slots, kv_heads, page_blocks + 1); the first ``n_page_blocks`` steps
+    stream the cached prefix exactly like ``_paged_kernel`` (every query
+    sees the whole prefix — uniform mask), and the FINAL step attends the
+    chunk's own fresh K/V causally (query w sees chunk keys j <= w,
+    j < widths[slot]).  Online-softmax state is (W·G, ·) so the chunk's
+    queries share one scratch walk."""
+    if quantized:
+        (bt_ref, len_ref, wid_ref, ks_ref, vs_ref,
+         q_ref, k_ref, v_ref, ck_ref, cv_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    else:
+        (bt_ref, len_ref, wid_ref,
+         q_ref, k_ref, v_ref, ck_ref, cv_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    s_i = pl.program_id(0)
+    k_i = pl.program_id(1)
+    p_i = pl.program_id(2)
+
+    @pl.when(p_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s_i]
+    wid = wid_ref[s_i]
+
+    def _online(s, v, v_s):
+        """One online-softmax update with scores s: (W·G, cols)."""
+        m_prev = m_scr[...]                                   # (W·G, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        pv = jax.lax.dot(p, v, preferred_element_type=jnp.float32)
+        if v_s is not None:
+            pv = pv * v_s
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when((p_i < n_page_blocks) & (p_i * page_size < length))
+    def _prefix_body():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (W·G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            page_id = bt_ref[s_i, p_i]
+            k_s = ks_ref[page_id, k_i]
+            v_s = vs_ref[page_id, k_i]
+            sc = scale * k_s
+        else:
+            v_s = None
+            sc = scale
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sc
+        kpos = p_i * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        _online(s, v, v_s)
+
+    @pl.when((p_i == n_page_blocks) & (wid > 0))
+    def _chunk_body():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (W·G, D)
+        ck = ck_ref[0, :, 0, :].astype(jnp.float32)          # (W, D)
+        cv = cv_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, ck, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        w_of_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        j_of_col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((j_of_col <= w_of_row) & (j_of_col < wid), s, NEG_INF)
+        _online(s, cv, None)
+
+    @pl.when(p_i == n_page_blocks)
+    def _flush():
+        # width-0 slots never ran a body: l stays 0 and the flush writes
+        # zeros, matching ref.py's masked softmax
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention_pallas(q, k_pages, v_pages, block_table, lengths,
+                                  chunk_k, chunk_v, widths,
+                                  k_scales=None, v_scales=None, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (S,W,H,D) — W speculative query positions per slot at logical
+    positions ``lengths[s] + [0, W)``; chunk_k/chunk_v: (S,W,KH,D) fresh
+    (not-yet-committed) K/V attended causally up to ``widths[s]``;
+    everything else as :func:`paged_attention_pallas` -> (S,W,H,D)."""
+    s_n, w_n, h, d = q.shape
+    _, page, kh, _ = k_pages.shape
+    assert h % kh == 0, (h, kh)
+    quantized = k_scales is not None
+    assert quantized == (k_pages.dtype not in (jnp.bfloat16, jnp.float32)), \
+        (k_pages.dtype, quantized)
+    g = h // kh
+    p_n = block_table.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    # (S,W,H,D) -> (S,KH,W·G,D): row r of a slot/kv-head tile is query
+    # w = r // G, query head r % G
+    q4 = q.reshape(s_n, w_n, kh, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s_n, kh, w_n * g, d)
+
+    q_spec = pl.BlockSpec((1, 1, w_n * g, d),
+                          lambda s, k, p, bt, *_: (s, k, 0, 0))
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, d),
+        lambda s, k, p, bt, *_: (bt[s, jnp.minimum(p, p_n - 1)], 0, k, 0))
+    chunk_spec = pl.BlockSpec((1, w_n, 1, d),
+                              lambda s, k, p, bt, *_: (s, 0, k, 0))
+    o_spec = pl.BlockSpec((1, 1, w_n * g, d),
+                          lambda s, k, p, bt, *_: (s, k, 0, 0))
+    prefetch = [block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+                widths.astype(jnp.int32)]
+    if quantized:
+        prefetch += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(s_n, kh, p_n + 1),
+        in_specs=[q_spec, kv_spec, kv_spec, chunk_spec, chunk_spec],
+        out_specs=o_spec,
+        scratch_shapes=[
+            pltpu.VMEM((w_n * g, 1), jnp.float32),
+            pltpu.VMEM((w_n * g, 1), jnp.float32),
+            pltpu.VMEM((w_n * g, d), jnp.float32),
+        ])
+    out = pl.pallas_call(
+        functools.partial(_verify_kernel, scale=scale, page_size=page,
+                          n_page_blocks=p_n, group=g, width=w_n,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_n, kh, w_n * g, d), q.dtype),
+        interpret=interpret,
+    )(*prefetch, q4, k_pages, v_pages, chunk_k, chunk_v)
+    return out.reshape(s_n, kh, w_n, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(s_n, w_n, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention_pallas(q, k_pages, v_pages, block_table, lengths,
                            k_scales=None, v_scales=None, *,

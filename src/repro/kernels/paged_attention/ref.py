@@ -20,6 +20,62 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_verify_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array, chunk_k: jax.Array,
+                               chunk_v: jax.Array, widths: jax.Array,
+                               k_scales: Optional[jax.Array] = None,
+                               v_scales: Optional[jax.Array] = None,
+                               ) -> jax.Array:
+    """Multi-query (speculative verify) paged attention oracle.
+
+    q: (S, W, H, D) — W query positions per slot, query ``w`` sitting at
+    logical position ``lengths[s] + w``; k_pages/v_pages hold the cached
+    prefix (positions < lengths[s]).  The chunk's own K/V
+    (``chunk_k``/``chunk_v``: (S, W, KH, D), fresh bf16 — NOT yet in the
+    pages: write-after-accept, see repro.spec) is attended causally
+    in-chunk: query ``w`` sees chunk keys ``j <= w`` with ``j <
+    widths[s]``.  Queries at ``w >= widths[s]`` are padding; their
+    outputs are garbage the engine masks.  -> (S, W, H, D).
+    """
+    s_n, w_n, h, d = q.shape
+    _, page, kh, _ = k_pages.shape
+    p_n = block_table.shape[1]
+    g = h // kh
+    k = k_pages[block_table].astype(jnp.float32)         # (S,P,page,KH,D)
+    v = v_pages[block_table].astype(jnp.float32)
+    if k_scales is not None:
+        k = k * k_scales[block_table][:, :, None, :, None]
+        v = v * v_scales[block_table][:, :, None, :, None]
+    t = p_n * page
+    k = k.reshape(s_n, t, kh, d)
+    v = v.reshape(s_n, t, kh, d)
+    qg = q.reshape(s_n, w_n, kh, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s_ctx = jnp.einsum("swkgd,stkd->skgwt", qg, k) * scale
+    ctx_ok = jnp.arange(t)[None, :] < lengths[:, None]           # (S,T)
+    s_ctx = jnp.where(ctx_ok[:, None, None, None, :], s_ctx, NEG_INF)
+    s_chk = jnp.einsum("swkgd,sjkd->skgwj", qg,
+                       chunk_k.astype(jnp.float32)) * scale
+    jj = jnp.arange(w_n)
+    chk_ok = (jj[None, :] <= jj[:, None])[None] \
+        & (jj[None, None, :] < widths[:, None, None])            # (S,W,W)
+    s_chk = jnp.where(chk_ok[:, None, None], s_chk, NEG_INF)
+
+    s_all = jnp.concatenate([s_ctx, s_chk], axis=-1)
+    ok_all = jnp.concatenate(
+        [jnp.broadcast_to(ctx_ok[:, None, :], (s_n, w_n, t)),
+         chk_ok], axis=-1)                                       # (S,W,T+W)
+    m = jnp.max(s_all, axis=-1, keepdims=True)
+    p = jnp.exp(s_all - m) * ok_all[:, None, None]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    o = jnp.einsum("skgwt,stkd->swkgd", p[..., :t], v) \
+        + jnp.einsum("skgwj,sjkd->swkgd", p[..., t:],
+                     chunk_v.astype(jnp.float32))
+    return o.reshape(s_n, w_n, h, d).astype(q.dtype)
+
+
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         block_table: jax.Array, lengths: jax.Array,
                         k_scales: Optional[jax.Array] = None,

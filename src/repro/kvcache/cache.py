@@ -188,15 +188,24 @@ def _quant_token_write(pages, scales, pidx, off, new):
 
 
 def paged_write_batch(cache: dict, positions: jax.Array,
-                      k_new: jax.Array, v_new: jax.Array) -> dict:
+                      k_new: jax.Array, v_new: jax.Array,
+                      mask: jax.Array | None = None) -> dict:
     """Write one token per slot: k_new/v_new (S, KH, D) land at logical
     position ``positions[s]`` of each slot's pages.  Slots whose block-
-    table row is unallocated resolve to the null page."""
+    table row is unallocated resolve to the null page.  ``mask`` (S,)
+    bool reroutes masked-out slots' writes to the null page (the
+    speculative-decode commit replays only ACCEPTED tokens this way —
+    rejected drafts never touch a live page, so rollback is exact even
+    for quantized pools whose scales a rejected tail could have grown)."""
     kp, vp, ks, vs, bt = paged_views(cache)
     page = kp.shape[1]
     s_n = positions.shape[0]
-    pidx = bt[jnp.arange(s_n), positions // page]                # (S,)
+    lpage = jnp.minimum(positions // page, bt.shape[1] - 1)      # pad-safe
+    pidx = bt[jnp.arange(s_n), lpage]                            # (S,)
     off = positions % page
+    if mask is not None:
+        pidx = jnp.where(mask, pidx, 0)
+        off = jnp.where(mask, off, 0)
     out = dict(cache)
     if ks is None:
         out["k_pages"] = kp.at[pidx, off].set(k_new.astype(kp.dtype))

@@ -10,7 +10,11 @@ the same objects the dry-run lowers for the production mesh.
 policy-ordered admission, prefix caching over the paged pools, chunked
 prefill, and preemption with recompute-on-readmit; ``--arrival-rate``
 paces submissions open-loop (Poisson) instead of queueing everything
-upfront.
+upfront.  ``--spec ngram|draft`` adds speculative decoding on top
+(``repro.spec``): draft -> batched paged verify -> exact accept/commit
+rounds, greedy output token-identical to non-speculative decode;
+``--admission-control`` turns on EDF's goodput-optimal dropping of
+SLO-infeasible requests.
 """
 from __future__ import annotations
 
@@ -61,6 +65,31 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrivals, requests/sec "
                          "(0: submit everything upfront)")
+    ap.add_argument("--admission-control", action="store_true",
+                    help="drop requests whose cost-model prefill estimate "
+                         "already overruns their TTFT deadline at "
+                         "admission (EDF; goodput-optimal dropping)")
+    ap.add_argument("--spec", default="none",
+                    choices=["none", "ngram", "draft"],
+                    help="speculative decoding (repro.spec.SpecEngine, "
+                         "implies the scheduler): model-free n-gram "
+                         "prompt-lookup drafts or a small draft LM "
+                         "sharing the vocab; greedy output is token-"
+                         "identical to non-speculative decode")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens per verify round (adaptive "
+                         "controller tunes per-slot k below this)")
+    ap.add_argument("--draft-config", default="auto",
+                    help="--spec draft: arch id for the draft model, or "
+                         "'auto' for a shrunk copy of the target config "
+                         "(random-init; 'self' = self-speculation oracle)")
+    ap.add_argument("--spec-adaptive", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="adapt per-slot draft length from the measured "
+                         "acceptance EMA via the cost model")
+    ap.add_argument("--spec-slack", type=float, default=None,
+                    help="disable speculation for a tick when a queued "
+                         "EDF deadline is closer than this many ms")
     ap.add_argument("--kv-style", default="full",
                     choices=["full", "gqa", "mqa"])
     ap.add_argument("--kv-dtype", default="bf16",
@@ -86,19 +115,44 @@ def main(argv=None):
         params = quantize_tree(params, quant=args.quant)
         print(f"[serve] weights quantized to {args.quant}")
 
-    if args.policy:
-        from repro.sched import SchedEngine
-        eng = SchedEngine(lm, params, n_slots=args.slots,
-                          max_len=args.max_len, seed=args.seed,
-                          page_size=args.page_size,
-                          decode_block=args.decode_block,
-                          policy=args.policy,
-                          prefix_cache=args.prefix_cache,
-                          prefill_chunk=args.prefill_chunk,
-                          slo_ttft=None if args.slo_ttft is None
-                          else args.slo_ttft / 1e3,
-                          slo_tpot=None if args.slo_tpot is None
-                          else args.slo_tpot / 1e3)
+    if args.spec != "none" or args.policy:
+        sched_kw = dict(n_slots=args.slots,
+                        max_len=args.max_len, seed=args.seed,
+                        page_size=args.page_size,
+                        decode_block=args.decode_block,
+                        policy=args.policy or "fcfs",
+                        prefix_cache=args.prefix_cache,
+                        prefill_chunk=args.prefill_chunk,
+                        admission_control=args.admission_control,
+                        slo_ttft=None if args.slo_ttft is None
+                        else args.slo_ttft / 1e3,
+                        slo_tpot=None if args.slo_tpot is None
+                        else args.slo_tpot / 1e3)
+        if args.spec != "none":
+            from repro.spec import SpecEngine, draft_config_of
+            draft_lm = draft_params = None
+            if args.spec == "draft":
+                if args.draft_config == "self":
+                    draft_lm, draft_params = lm, params
+                else:
+                    dcfg = (draft_config_of(cfg)
+                            if args.draft_config == "auto"
+                            else get_smoke_config(args.draft_config)
+                            if args.smoke else get_config(args.draft_config))
+                    draft_lm = LM(dcfg)
+                    draft_params = draft_lm.init(
+                        jax.random.PRNGKey(args.seed + 1))
+                    print(f"[serve] draft model {dcfg.name}: "
+                          f"{dcfg.num_layers}L d={dcfg.d_model}")
+            eng = SpecEngine(lm, params, spec=args.spec,
+                             draft_k=args.draft_k, draft_lm=draft_lm,
+                             draft_params=draft_params,
+                             adaptive=args.spec_adaptive,
+                             spec_slack_s=None if args.spec_slack is None
+                             else args.spec_slack / 1e3, **sched_kw)
+        else:
+            from repro.sched import SchedEngine
+            eng = SchedEngine(lm, params, **sched_kw)
     elif args.paged:
         from repro.serve.engine import PagedEngine
         eng = PagedEngine(lm, params, n_slots=args.slots,
@@ -127,7 +181,10 @@ def main(argv=None):
         done = eng.run_to_completion()
     dt = time.perf_counter() - t0
     n_tok = sum(len(done[i].out_tokens) for i in ids)
-    if args.policy:
+    if args.spec != "none":
+        mode = (f"sched/{args.policy or 'fcfs'} + spec/{args.spec}, "
+                f"{eng.sync_count} host syncs")
+    elif args.policy:
         mode = f"sched/{args.policy}, {eng.sync_count} host syncs"
     elif args.paged:
         mode = f"paged, {eng.sync_count} host syncs"
@@ -136,7 +193,7 @@ def main(argv=None):
     print(f"[serve] {cfg.name}: {len(ids)} requests, {n_tok} tokens in "
           f"{dt:.1f}s ({n_tok/dt:.1f} tok/s, continuous batching over "
           f"{args.slots} slots, {mode})")
-    if args.policy:
+    if args.spec != "none" or args.policy:
         print(f"[serve] sched telemetry: {eng.telemetry()}")
     for i in ids[:3]:
         print(f"  req {i}: {len(done[i].out_tokens)} tokens "

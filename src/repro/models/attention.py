@@ -452,6 +452,59 @@ def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
     return y, cache
 
 
+def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
+                           cache: dict, stage: dict, spos, *,
+                           style: str = "full",
+                           use_kernel: bool = True) -> tuple:
+    """Speculative-verify attention: score W draft positions per slot in
+    ONE dispatch against the paged cache (``repro.spec``).
+
+    x: (S, W, d) — the fed chunk (last accepted token + draft tokens),
+    right-padded; ``spos`` is ``(lengths (S,), widths (S,))``: slot s's
+    chunk sits at logical positions ``lengths[s] + [0, widths[s])``.
+    Query w attends the cached prefix (positions < lengths[s], read from
+    the pages — quantized pools dequant fused in the kernel) plus the
+    chunk's own fresh bf16 K/V causally (keys j <= w, j < widths[s]).
+
+    Write-after-accept: the chunk's K/V goes into the contiguous
+    ``stage`` node (bf16), NOT the pages — the engine commits only the
+    accepted prefix afterwards by replaying the exact sequential
+    quantized token writes (``kvcache.paged_write_batch(mask=)``), so a
+    rejected tail can never grow a page's running amax or requantize
+    live entries: the paged pools evolve bit-identically to non-
+    speculative decode and rollback is a pure length truncation."""
+    from repro import kvcache
+    from repro.kernels.paged_attention.ops import paged_verify_attention
+    if a.window is not None:
+        raise NotImplementedError("paged verify: sliding window unsupported")
+    lengths, widths = spos
+    b, w, _ = x.shape
+    kvh = a.kv_heads_effective()
+    kvh_store = cache["k_pages"].shape[2]
+
+    apos = lengths[:, None] + jnp.arange(w)[None, :]             # (S,W)
+    q = linear_apply(p["wq"], x).reshape(b, w, a.heads_padded, a.head_dim)
+    k_new = linear_apply(p["wk"], x).reshape(b, w, kvh, a.head_dim)
+    v_new = linear_apply(p["wv"], x).reshape(b, w, kvh, a.head_dim)
+    q = apply_rope(q, apos, a.rope_theta)
+    k_new = apply_rope(k_new, apos, a.rope_theta)
+    k_new = _merge_heads(k_new, kvh_store)
+    v_new = _merge_heads(v_new, kvh_store)
+    from repro.sharding.ctx import maybe_constrain
+    k_new = maybe_constrain(k_new, ("pod", "data"), None, None, None)
+    v_new = maybe_constrain(v_new, ("pod", "data"), None, None, None)
+
+    stage = kvcache.prefill_write(stage, {"k": k_new, "v": v_new})
+    kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
+    o = paged_verify_attention(q, kp, vp, bt, lengths,
+                               k_new.astype(jnp.bfloat16),
+                               v_new.astype(jnp.bfloat16), widths,
+                               k_sc, v_sc, use_kernel=use_kernel)
+    o = o.reshape(b, w, a.heads_padded * a.head_dim)
+    y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
+    return y, stage
+
+
 def _posv(pos: jax.Array, b: int) -> jax.Array:
     """Normalize pos (scalar or (B,)) to a (B,) vector."""
     return jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (b,))

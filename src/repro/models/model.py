@@ -184,6 +184,26 @@ class LM:
             jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), cache
 
+    def verify_paged(self, params, tokens, cache, stage, lengths, widths):
+        """Speculative verify (``repro.spec``): score ``tokens`` (S, W) —
+        the last accepted token followed by draft tokens, right-padded —
+        in ONE dispatch.  Row s's chunk sits at logical positions
+        ``lengths[s] + [0, widths[s])`` of its slot; queries attend the
+        slot's paged prefix plus the chunk itself causally
+        (models/attention.attention_verify_paged).  The chunk's K/V is
+        written into ``stage`` (a (S, W) bf16 contiguous cache from
+        :meth:`init_cache`), NOT the paged pools — the engine commits
+        only the accepted prefix afterwards (write-after-accept).
+        Returns logits at ALL W positions ((S, W, V)) and the filled
+        stage cache; the paged ``cache`` is read-only here."""
+        combined = _zip_verify_cache(cache, stage)
+        x, out, _ = self.backbone(params, tokens, mode="verify",
+                                  cache=combined, pos=(lengths, widths),
+                                  train=False)
+        logits = x.astype(jnp.float32) @ self._head_w(params).astype(
+            jnp.float32)
+        return self._mask_pad_logits(logits), _unzip_stage(out)
+
     def decode_step(self, params, token, cache, pos):
         """token: (B,) int32; pos: scalar position -> (logits (B,V), cache)."""
         x, cache, _ = self.backbone(params, token[:, None], mode="decode",
@@ -191,6 +211,37 @@ class LM:
         logits = x[:, 0].astype(jnp.float32) @ self._head_w(params).astype(
             jnp.float32)
         return self._mask_pad_logits(logits), cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative-verify cache plumbing (repro.spec)
+
+
+def _zip_verify_cache(paged: dict, stage: dict) -> dict:
+    """Merge a paged cache tree with a contiguous staging tree into the
+    per-block ``{"kv": <paged node>, "stage": <contig k/v node>}`` shape
+    ``mode="verify"`` consumes.  Both trees share the block structure
+    (scan-stacked leaves included); only attention blocks are supported —
+    the paged engines gate on attention-only decoders."""
+    if isinstance(paged, dict) and "kv" in paged \
+            and isinstance(paged["kv"], dict) and "k_pages" in paged["kv"]:
+        return {"kv": paged["kv"], "stage": stage["kv"]}
+    if isinstance(paged, dict):
+        return {k: _zip_verify_cache(paged[k], stage[k]) for k in paged}
+    raise NotImplementedError(
+        f"verify: unsupported cache leaf {type(paged)}")
+
+
+def _unzip_stage(out: dict) -> dict:
+    """Invert :func:`_zip_verify_cache` on the verify output tree: keep
+    only the written staging nodes, renamed back to ``kv`` so the result
+    mirrors an :meth:`LM.init_cache` tree (what the engine's commit and
+    ``scatter_prefill_cache``-style walkers expect)."""
+    if isinstance(out, dict) and "stage" in out:
+        return {"kv": out["stage"]}
+    if isinstance(out, dict):
+        return {k: _unzip_stage(v) for k, v in out.items()}
+    raise NotImplementedError(f"verify: unsupported output leaf {type(out)}")
 
 
 # ---------------------------------------------------------------------------

@@ -175,6 +175,14 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                 y = attn_mod.attention_forward(blk["attn"], h, a,
                                                use_flash=cfg.use_kernels,
                                                **chunk_kw)
+            elif mode == "verify":
+                # speculative verify (repro.spec): W draft queries against
+                # the paged cache; fresh chunk K/V lands in the bf16
+                # "stage" node (write-after-accept), pages untouched.
+                y, stage = attn_mod.attention_verify_paged(
+                    blk["attn"], h, a, c["kv"], c["stage"], pos,
+                    style=cfg.kv_cache_style)
+                nc["stage"] = stage
             elif mode == "prefill":
                 if "k_pages" in c["kv"]:
                     # chunked/continuation prefill straight into the paged

@@ -24,6 +24,13 @@ from typing import Optional
 #: engine supplies a TTFT target; tier-relative like every latency here.
 DEFAULT_TTFT_S = 0.5
 
+#: SJF starvation aging: every second a request waits in the queue
+#: discounts this many (estimated-service) seconds off its rank, so a
+#: long job's rank eventually drops below any stream of fresh short jobs
+#: — pure SJF would starve it forever.  Subtractive aging makes the
+#: discount unbounded, which is the admission guarantee.
+DEFAULT_SJF_AGING = 0.05
+
 
 def _gen_len(req) -> int:
     return len(req.out_tokens)
@@ -46,6 +53,13 @@ class Policy:
     def victim(self, req, now: float):
         return self.priority(req, now)
 
+    def admit_drop(self, req, now: float) -> bool:
+        """Admission-time SLO feasibility: True when the request should
+        be DROPPED instead of admitted because its SLO is already
+        unmeetable (goodput-optimal dropping).  Base policies never
+        drop; deadline-EDF overrides with a cost-model check."""
+        return False
+
 
 class FCFS(Policy):
     pass
@@ -54,14 +68,20 @@ class FCFS(Policy):
 class SJF(Policy):
     """Cost-model-predicted shortest-job-first: rank by estimated
     remaining service seconds (prefill roofline for uncached tokens +
-    per-token decode for the unGenerated budget)."""
+    per-token decode for the unGenerated budget), DISCOUNTED by queue
+    wait (starvation aging): rank = remaining_s - aging * wait.  With
+    ``aging = 0`` this is pure SJF, under which one long request starves
+    forever behind a steady stream of short arrivals; any positive rate
+    bounds the wait because the discount grows without limit."""
 
     name = "sjf"
 
-    def __init__(self, cfg, tier: str = "v5e-1"):
+    def __init__(self, cfg, tier: str = "v5e-1",
+                 aging: float = DEFAULT_SJF_AGING):
         from repro.core.costmodel import TIERS
         self.cfg = cfg
         self.tier = TIERS[tier] if isinstance(tier, str) else tier
+        self.aging = aging
 
     def remaining_s(self, req) -> float:
         from repro.core.costmodel import service_estimate
@@ -72,6 +92,12 @@ class SJF(Policy):
         return est["t_total_s"]
 
     def priority(self, req, now: float):
+        wait = max(now - req.t_submit, 0.0)
+        return (self.remaining_s(req) - self.aging * wait, req.rid)
+
+    def victim(self, req, now: float):
+        # preemption stays pure longest-remaining-first: aging exists to
+        # get a starved job ADMITTED, not to evict whoever waited least
         return (self.remaining_s(req), req.rid)
 
 
@@ -79,12 +105,23 @@ class EDF(Policy):
     """Earliest-deadline-first on the TTFT SLO: deadline = submit time +
     the request's TTFT target (engine/policy default when unset).  The
     preemption victim is the request with the LATEST deadline — the one
-    that can best afford a recompute."""
+    that can best afford a recompute.
+
+    With a model config attached, :meth:`admit_drop` additionally flags
+    requests whose cost-model prefill estimate already overruns their
+    deadline at admission time: serving them can only miss their SLO
+    while burning prefill the in-SLO requests needed — dropping them is
+    goodput-optimal.  The scheduler applies this only when its
+    ``admission_control`` flag is on."""
 
     name = "edf"
 
-    def __init__(self, slo_ttft: Optional[float] = None):
+    def __init__(self, slo_ttft: Optional[float] = None, *, cfg=None,
+                 tier: str = "v5e-1"):
+        from repro.core.costmodel import TIERS
         self.slo_ttft = slo_ttft if slo_ttft is not None else DEFAULT_TTFT_S
+        self.cfg = cfg
+        self.tier = TIERS[tier] if isinstance(tier, str) else tier
 
     def deadline(self, req) -> float:
         slo = req.slo_ttft if req.slo_ttft is not None else self.slo_ttft
@@ -92,6 +129,18 @@ class EDF(Policy):
 
     def priority(self, req, now: float):
         return (self.deadline(req), req.rid)
+
+    def admit_drop(self, req, now: float) -> bool:
+        dl = self.deadline(req)
+        if now >= dl:                 # deadline already passed in queue
+            return True
+        if self.cfg is None:
+            return False
+        from repro.core.costmodel import service_estimate
+        est = service_estimate(self.cfg, self.tier,
+                               prompt=max(_remaining_prefill(req), 1),
+                               gen=0)
+        return now + est["t_prefill_s"] > dl
 
 
 def make_policy(name: str, *, cfg=None, tier: str = "v5e-1",
@@ -104,5 +153,5 @@ def make_policy(name: str, *, cfg=None, tier: str = "v5e-1",
             raise ValueError("sjf needs the model config for cost estimates")
         return SJF(cfg, tier)
     if name == "edf":
-        return EDF(slo_ttft)
+        return EDF(slo_ttft, cfg=cfg, tier=tier)
     raise ValueError(f"unknown policy {name!r} (fcfs | sjf | edf)")

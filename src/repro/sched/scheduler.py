@@ -55,6 +55,7 @@ class SchedStats:
     chunks: int = 0                 # prefill dispatches
     prefill_tokens: int = 0         # tokens actually run through prefill
     prefix_hit_tokens: int = 0      # tokens served from the prefix cache
+    slo_rejected: int = 0           # admission-time SLO-infeasible drops
 
 
 class SchedEngine(PagedEngine):
@@ -65,8 +66,10 @@ class SchedEngine(PagedEngine):
                  prefix_cache: bool = True,
                  slo_ttft: Optional[float] = None,
                  slo_tpot: Optional[float] = None,
+                 admission_control: bool = False,
                  tier: str = "v5e-1", **kw):
         super().__init__(lm, params, **kw)
+        self.admission_control = admission_control
         if prefill_chunk is None:
             prefill_chunk = 4 * self.page_size
         if prefill_chunk % self.page_size or prefill_chunk <= 0:
@@ -131,11 +134,30 @@ class SchedEngine(PagedEngine):
         if not (self.queue and self.free):
             return
         now = time.perf_counter()
+        if self.admission_control:
+            self._drop_infeasible(now)
         for req in sorted(self.queue,
                           key=lambda r: self.policy.priority(r, now)):
             if not self.free:
                 break
             self._admit_one(req, now)
+
+    def _drop_infeasible(self, now: float) -> None:
+        """Admission-time SLO feasibility rejection (goodput-optimal
+        dropping): requests the policy deems already unmeetable —
+        deadline-EDF checks the cost model's prefill estimate against
+        the TTFT deadline — are rejected outright instead of burning
+        prefill on a guaranteed SLO miss.  Counted separately in
+        telemetry (``slo_rejected``); the request completes empty with
+        ``rejected=True``."""
+        for req in list(self.queue):
+            if self.policy.admit_drop(req, now):
+                self.queue.remove(req)
+                self._chains.pop(req.rid, None)
+                req.rejected = True
+                req.done = True
+                req.t_done = now
+                self.stats.slo_rejected += 1
 
     def _admit_one(self, req: Request, now: float) -> bool:
         toks = self._sched_tokens(req)

@@ -57,6 +57,7 @@ class Request:
     prefix_hit_tokens: int = 0         # prompt tokens served from cache
     preemptions: int = 0
     progress: int = 0                  # prefill tokens already cached
+    rejected: bool = False             # admission-time SLO-infeasible drop
 
 
 class _EngineBase:

@@ -132,6 +132,26 @@ class PageAllocator:
         if self.refs[page] == 0:
             self.free.append(page)
 
+    def cow(self, slot: int, index: int) -> int:
+        """Copy-on-write: replace the SHARED page at ``slot``'s block-
+        table position ``index`` with a fresh exclusive page (the caller
+        copies the device contents).  The old page keeps its other
+        references (prefix cache / other rows); this row's reference
+        moves to the fresh page.  Atomic: on OutOfPagesError nothing
+        changed.  Returns the fresh physical page id."""
+        owned = self._owned.get(slot)
+        if owned is None or index >= len(owned):
+            raise ValueError(f"slot {slot} owns no page at index {index}")
+        old = owned[index]
+        if self.refs[old] <= 1:
+            raise ValueError(f"cow of exclusive page {old} (refs <= 1)")
+        (fresh,) = self._take(1)
+        self.refs[fresh] = 1
+        owned[index] = fresh
+        self.table[slot, index] = fresh
+        self.unref(old)
+        return fresh
+
     def release(self, slot: int) -> None:
         for p in self._owned.pop(slot, ()):
             self.unref(p)
@@ -228,6 +248,44 @@ def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths,
                 for k in paged_cache}
     raise NotImplementedError(
         f"paged engine: unsupported cache leaf {type(paged_cache)}")
+
+
+def commit_spec_cache(paged_cache, stage_cache, lengths, n_write):
+    """Commit a speculative-verify round's ACCEPTED tokens into the paged
+    cache (write-after-accept; ``repro.spec``).
+
+    ``stage_cache`` is the bf16 staging tree ``LM.verify_paged`` filled —
+    per attention node ``{"k"/"v": (S, W, KH, D)}`` — and ``n_write``
+    (S,) says how many leading chunk tokens each slot accepted.  The
+    writes REPLAY the baseline decode path exactly: a ``lax.scan`` of
+    per-token ``kvcache.paged_write_batch`` calls in chunk order, masked
+    to ``i < n_write[s]`` (masked writes land in the null page), so the
+    pools — including a quantized pool's per-page running amax scales
+    and requant events — evolve just as ``decode_block`` steps would
+    have.  Rejected draft K/V is simply never written: rollback is a
+    pure host-side length truncation."""
+    from repro.kvcache import paged_write_batch
+    if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
+        k_rows, v_rows = stage_cache["k"], stage_cache["v"]
+        w = k_rows.shape[-3]
+
+        def commit_node(node, k_r, v_r):
+            def body(c, i):
+                return paged_write_batch(c, lengths + i, k_r[:, i],
+                                         v_r[:, i],
+                                         mask=i < n_write), None
+            node, _ = jax.lax.scan(body, node, jnp.arange(w))
+            return node
+
+        if paged_cache["k_pages"].ndim == 5:   # (G, N, page, KH, D) stacked
+            return jax.vmap(commit_node)(paged_cache, k_rows, v_rows)
+        return commit_node(paged_cache, k_rows, v_rows)
+    if isinstance(paged_cache, dict):
+        return {k: commit_spec_cache(paged_cache[k], stage_cache[k],
+                                     lengths, n_write)
+                for k in paged_cache}
+    raise NotImplementedError(
+        f"spec commit: unsupported cache leaf {type(paged_cache)}")
 
 
 def set_block_table_rows(cache, slots, rows):

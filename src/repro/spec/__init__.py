@@ -1,0 +1,40 @@
+"""Speculative decoding subsystem over the paged serving stack.
+
+AE-LLM's thesis is that inference-stage efficiency techniques must be
+SELECTED adaptively; speculative decoding is the canonical example — its
+win rate (draft acceptance) is workload-dependent, so it appears both as
+a first-class ``c_inf`` search arm (``core.space.InfChoice.spec``,
+priced by ``core.costmodel.spec_speedup``) and as an online adaptive
+loop (``controller``) tuning per-slot draft length at runtime.
+
+* ``drafter``    — proposers: model-free n-gram / prompt-lookup (no
+                   second checkpoint) and a small draft LM sharing the
+                   vocab, teacher-forced on the confirmed stream.
+* ``engine``     — ``SpecEngine(SchedEngine)``: draft → batched
+                   multi-query paged verify (one dispatch, one host
+                   sync) → exact accept/reject → commit-accepted-only.
+* ``controller`` — acceptance-EMA → cost-model-optimal draft length.
+* ``rollback``   — rollback/COW invariants: rejected drafts never touch
+                   a live page; shared / prefix-cache-held pages are
+                   copy-on-written before any speculative commit.
+
+Exactness: greedy spec output is token-identical to non-speculative
+greedy decode (the verify computation scores the same conditionals; the
+commit replays the baseline's sequential cache writes bit-exactly, bf16
+and quantized pools alike); sampled output follows the exact rejection
+rule for deterministic proposals, so the output DISTRIBUTION equals the
+target model's.
+"""
+from repro.spec.controller import AdaptiveDraftController
+from repro.spec.drafter import DraftLMDrafter, NgramDrafter, draft_config_of
+from repro.spec.engine import SpecEngine, SpecStats, spec_accept
+from repro.spec.rollback import (copy_page_device, ensure_exclusive_tail,
+                                 rollback_length, span_pages)
+
+__all__ = [
+    "AdaptiveDraftController",
+    "NgramDrafter", "DraftLMDrafter", "draft_config_of",
+    "SpecEngine", "SpecStats", "spec_accept",
+    "ensure_exclusive_tail", "rollback_length", "copy_page_device",
+    "span_pages",
+]

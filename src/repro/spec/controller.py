@@ -1,0 +1,63 @@
+"""Adaptive draft-length controller (``repro.spec``).
+
+The AE-LLM "adaptive" loop in miniature: each slot keeps an exponential
+moving average of its measured draft acceptance rate, and before every
+verify round the controller picks the draft length ``k`` that maximizes
+the COST MODEL's predicted speculative speedup at that rate
+(``core.costmodel.spec_speedup`` — the same model NSGA-II trades the
+``spec`` arm with offline, now steering the runtime like SJF already
+does for admission).  A slot whose drafts stop landing walks itself
+down to ``k = 0`` (speculation off — a verify round costs draft FLOPs
+plus a wider verify, so at low acceptance plain decode wins) and back up
+when the workload turns repetitive again.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class AdaptiveDraftController:
+    """Per-slot EMA acceptance tracking + modeled-speedup k selection."""
+
+    def __init__(self, n_slots: int, k_max: int, *, arm: str = "ngram",
+                 adaptive: bool = True, a0: float = 0.5, beta: float = 0.3):
+        from repro.core.costmodel import SPEC_DRAFT_COST
+        self.n_slots = n_slots
+        self.k_max = k_max
+        self.adaptive = adaptive
+        self.a0 = a0                      # optimistic prior: explore first
+        self.beta = beta
+        self.draft_cost = SPEC_DRAFT_COST.get(arm, 0.05)
+        self.ema = np.full((n_slots,), a0, np.float64)
+        self.rounds = np.zeros((n_slots,), np.int64)
+
+    def reset(self, slot: int) -> None:
+        self.ema[slot] = self.a0
+        self.rounds[slot] = 0
+
+    def update(self, slot: int, proposed: int, accepted: int) -> None:
+        """Fold one verify round's outcome into the slot's EMA."""
+        if proposed <= 0:
+            return
+        rate = min(accepted / proposed, 1.0)
+        self.ema[slot] = (1 - self.beta) * self.ema[slot] + self.beta * rate
+        self.rounds[slot] += 1
+
+    def k_for(self, slot: int) -> int:
+        """Draft length for the next round: argmax_k of the modeled
+        speedup at the slot's current acceptance estimate (0 disables
+        speculation for the slot)."""
+        if not self.adaptive:
+            return self.k_max
+        from repro.core.costmodel import spec_speedup
+        a = float(self.ema[slot])
+        best_k, best_s = 0, 1.0
+        for k in range(1, self.k_max + 1):
+            s = spec_speedup(a, k, draft_cost=self.draft_cost)
+            if s > best_s:
+                best_k, best_s = k, s
+        return best_k
+
+    def stats(self) -> dict:
+        return {"ema_acceptance": [round(float(a), 3) for a in self.ema],
+                "k_next": [self.k_for(s) for s in range(self.n_slots)]}

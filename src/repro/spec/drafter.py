@@ -1,0 +1,197 @@
+"""Draft proposers for speculative decoding (``repro.spec``).
+
+Two arms, one host-facing interface (``propose_batch``):
+
+* ``NgramDrafter`` — model-free prompt-lookup decoding: propose the
+  continuation of the most recent earlier occurrence of the slot's
+  trailing n-gram in its own history (prompt + generated so far).  Zero
+  extra FLOPs and zero extra checkpoints, so the smoke config can
+  exercise the whole verify/rollback path; acceptance is high exactly on
+  repetitive text (retrieval prompts, code, greedy loops).
+* ``DraftLMDrafter`` — a small draft LM sharing the target's tokenizer /
+  vocab.  Drafts GREEDILY (a deterministic proposal distribution, which
+  is what the verifier's exact rejection rule assumes) with its own
+  contiguous KV cache, teacher-forced on the *confirmed* stream only:
+  every round it first catches up on the tokens the target accepted
+  since last time, then free-runs ``k`` steps — all inside ONE jitted
+  ``lax.scan`` dispatch for every active slot at once.  Draft-time
+  writes past the confirmed position are never trusted (the per-slot
+  position is advanced only over confirmed tokens), so the draft cache
+  "rolls back" for free: stale speculative entries are masked by the
+  position and overwritten when the real tokens are fed.
+
+Proposals are host-side numpy so the engine can size the verify chunk
+before dispatch; both drafters are deterministic given their inputs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serve.engine import _pow2_bucket
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: match the trailing ``n``-gram (longest of
+    ``n_max .. n_min`` that matches) against the history and propose the
+    ``k`` tokens that followed its most recent earlier occurrence."""
+
+    name = "ngram"
+
+    def __init__(self, k_max: int = 4, n_max: int = 3, n_min: int = 1):
+        self.k_max = k_max
+        self.n_max = n_max
+        self.n_min = n_min
+
+    def propose(self, history: np.ndarray, k: int) -> np.ndarray:
+        """history: (L,) int32 — prompt + tokens emitted so far.  Returns
+        up to ``k`` draft tokens (possibly empty: no n-gram match)."""
+        h = np.asarray(history, np.int32)
+        k = min(k, self.k_max)
+        if k <= 0 or len(h) < self.n_min + 1:
+            return np.zeros((0,), np.int32)
+        best = np.zeros((0,), np.int32)
+        for n in range(min(self.n_max, len(h) - 1), self.n_min - 1, -1):
+            tail = h[-n:]
+            # candidate start positions of earlier occurrences (the
+            # trailing occurrence itself is excluded: i + n < len)
+            wins = np.lib.stride_tricks.sliding_window_view(h[:-1], n)
+            hits = np.flatnonzero((wins == tail).all(axis=1))
+            # most recent match first, but prefer one with a FULL k-token
+            # continuation (the most recent match is often the trailing
+            # repetition itself, truncated by the end of the history)
+            for i in hits[::-1]:
+                cont = h[i + n:i + n + k]
+                if len(cont) == k:
+                    return cont.astype(np.int32)
+                if len(cont) > len(best):
+                    best = cont.astype(np.int32)
+            if len(best):
+                return best
+        return best
+
+    def propose_batch(self, batch: List[tuple], k_pad: int
+                      ) -> Dict[int, np.ndarray]:
+        """batch: [(slot, rid, history, k), ...] -> {slot: drafts}."""
+        return {slot: self.propose(hist, min(k, k_pad))
+                for slot, _rid, hist, k in batch}
+
+
+class DraftLMDrafter:
+    """Small-LM drafting (see module docstring).  ``lm``/``params`` is
+    any ``repro.models.model.LM`` sharing the target's vocab — e.g. the
+    shrunk config from :func:`draft_config_of`, or the target itself
+    (self-speculation: acceptance 1.0, useful as a plumbing oracle)."""
+
+    name = "draft"
+
+    def __init__(self, lm, params, *, n_slots: int, max_len: int,
+                 k_max: int = 4):
+        import jax
+        self.lm = lm
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.k_max = k_max
+        self.cache = lm.init_cache(n_slots, max_len)
+        self.pos = np.zeros((n_slots,), np.int32)   # confirmed tokens cached
+        self.rid = np.full((n_slots,), -1, np.int64)
+        self.syncs = 0
+        self._drive_jit = jax.jit(self._drive_impl,
+                                  static_argnames=("steps",))
+
+    # ------------------------------------------------------------------
+    def _drive_impl(self, params, cache, feed, feed_len, pos0, *,
+                    steps: int):
+        """``steps`` masked decode steps in one dispatch: step i feeds
+        ``feed[:, i]`` while ``i < feed_len[s]`` (teacher-forced catch-up
+        on confirmed tokens), then the model's own greedy pick
+        (free-running draft).  Returns the cache and the (steps, S)
+        greedy outputs; slot s's drafts are rows ``feed_len[s]-1 ..``."""
+        import jax
+        import jax.numpy as jnp
+        p_n = feed.shape[1]
+
+        def step(carry, i):
+            cache, pos, cur = carry
+            tok = jnp.where(i < feed_len,
+                            jnp.take(feed, jnp.minimum(i, p_n - 1), axis=1),
+                            cur)
+            logits, cache = self.lm.decode_step(params, tok, cache, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (cache, pos + 1, nxt), nxt
+
+        carry = (cache, pos0, jnp.zeros_like(pos0))
+        (cache, _, _), outs = jax.lax.scan(step, carry,
+                                           jnp.arange(steps))
+        return cache, outs
+
+    def propose_batch(self, batch: List[tuple], k_pad: int
+                      ) -> Dict[int, np.ndarray]:
+        """batch: [(slot, rid, history, k), ...] -> {slot: drafts}.  One
+        device dispatch + one host sync for the whole batch."""
+        import jax.numpy as jnp
+        work: List[Tuple[int, int, np.ndarray]] = []
+        for slot, rid, hist, k in batch:
+            if self.rid[slot] != rid:            # new/readmitted request
+                self.rid[slot] = rid
+                self.pos[slot] = 0
+            pending = np.asarray(hist[self.pos[slot]:], np.int32)
+            work.append((slot, min(k, k_pad), pending))
+        if not any(k > 0 for _, k, _ in work):
+            return {slot: np.zeros((0,), np.int32) for slot, _, _ in work}
+        # every slot with pending tokens is fed (and its pos advanced)
+        # even when its k is 0 this round — otherwise a k=0 slot's
+        # pending grows every round, dragging the scan length (a static
+        # jit arg) up with it.  Bucketing the length bounds recompiles.
+        p_n = max(max((len(p) for _, _, p in work), default=1), 1)
+        p_n = _pow2_bucket(p_n, lo=4)
+        feed = np.zeros((self.n_slots, p_n), np.int32)
+        feed_len = np.zeros((self.n_slots,), np.int32)
+        for slot, _k, pending in work:
+            if len(pending) + self.pos[slot] + k_pad >= self.max_len:
+                continue                         # no room: propose nothing
+            feed[slot, :len(pending)] = pending
+            feed_len[slot] = len(pending)
+        steps = int(p_n + k_pad - 1)
+        self.cache, outs = self._drive_jit(self.params, self.cache,
+                                           jnp.asarray(feed),
+                                           jnp.asarray(feed_len),
+                                           jnp.asarray(self.pos),
+                                           steps=steps)
+        outs = np.asarray(outs)                  # <- sync (1 per round)
+        self.syncs += 1
+        drafts: Dict[int, np.ndarray] = {}
+        for slot, k, pending in work:
+            fl = int(feed_len[slot])
+            if fl > 0:
+                self.pos[slot] += fl             # confirmed only: draft
+            if fl == 0 or k <= 0:                # writes roll back for free
+                drafts[slot] = np.zeros((0,), np.int32)
+                continue
+            drafts[slot] = outs[fl - 1:fl - 1 + k, slot].astype(np.int32)
+        return drafts
+
+
+def draft_config_of(cfg, *, shrink: int = 4):
+    """A tiny draft-model config sharing ``cfg``'s vocab/tokenizer: one
+    block group, ``d_model/shrink`` width.  Random-initialized (no second
+    checkpoint needed) — its drafts are only as good as its training,
+    but the verify path is exact regardless."""
+    a = cfg.attention
+    d_model = max(32, cfg.d_model // shrink)
+    heads = max(1, a.num_heads // shrink)
+    head_dim = max(8, d_model // max(heads, 1))
+    return cfg.with_(
+        name=cfg.name + "-draft",
+        num_layers=len(cfg.block_pattern),
+        d_model=d_model,
+        d_ff=max(64, cfg.d_ff // shrink),
+        attention=a.__class__(**{**a.__dict__, "num_heads": heads,
+                                 "num_kv_heads": max(1, min(
+                                     a.num_kv_heads, heads)),
+                                 "head_dim": head_dim}),
+        decode_attn_impl="eager",
+        kv_cache_dtype="bfloat16",
+    )

@@ -50,6 +50,62 @@ def test_sjf_orders_by_costmodel_estimate():
     assert max([small, mid, big], key=lambda r: pol.victim(r, 1.0)) is big
 
 
+def test_sjf_aging_prevents_starvation():
+    """Under pure SJF a continuous stream of short arrivals starves one
+    long request forever; queue-wait aging must eventually rank the long
+    job first.  Simulated admission: each tick one new short request
+    arrives and ONE queued request admits."""
+    from repro.configs import get_smoke_config
+    from repro.sched.policy import SJF
+    cfg = get_smoke_config("qwen2-1.5b")
+
+    def admitted_by(pol, ticks=200):
+        long_req = _req(0, 0.0, 512, 128)
+        queue = [long_req]
+        for t in range(1, ticks + 1):
+            queue.append(_req(t, float(t), 8, 4))     # fresh short job
+            queue.sort(key=lambda r: pol.priority(r, float(t)))
+            if queue.pop(0) is long_req:
+                return t
+        return None
+
+    assert admitted_by(SJF(cfg, aging=0.0)) is None    # starves forever
+    tick = admitted_by(SJF(cfg, aging=0.05))
+    assert tick is not None                            # aging admits it
+    # victim selection stays pure longest-remaining (aging is for
+    # admission): the long job is still the preferred preemption victim
+    pol = SJF(cfg, aging=0.05)
+    fresh_short, old_long = _req(1, 99.0, 8, 4), _req(0, 0.0, 512, 128)
+    assert max([fresh_short, old_long],
+               key=lambda r: pol.victim(r, 100.0)) is old_long
+
+
+def test_edf_admission_control_drops_infeasible():
+    """EDF admission-time SLO feasibility: a request whose deadline is
+    already unmeetable at admission is dropped (distinct telemetry
+    counter), while feasible requests complete normally."""
+    lm, params, rng = _setup()
+    prompts = [rng.integers(0, lm.cfg.vocab_size, (8,)).tolist()
+               for _ in range(2)]
+    eng = _sched(lm, params, policy="edf", prefix_cache=False,
+                 admission_control=True)
+    ok = eng.submit(prompts[0], max_new_tokens=6, slo_ttft=60.0)
+    doomed = eng.submit(prompts[1], max_new_tokens=6, slo_ttft=-1.0)
+    done = eng.run_to_completion()
+    assert done[doomed].rejected and done[doomed].done
+    assert done[doomed].out_tokens == []
+    assert not done[ok].rejected
+    assert len(done[ok].out_tokens) == 6
+    assert eng.stats.slo_rejected == 1
+    assert eng.telemetry()["slo_rejected"] == 1
+    # without admission control the same doomed request is still served
+    eng2 = _sched(lm, params, policy="edf", prefix_cache=False)
+    late = eng2.submit(prompts[1], max_new_tokens=6, slo_ttft=-1.0)
+    done2 = eng2.run_to_completion()
+    assert not done2[late].rejected
+    assert len(done2[late].out_tokens) == 6
+
+
 def test_edf_orders_by_ttft_deadline():
     pol = make_policy("edf", slo_ttft=0.5)
     a = _req(0, 1.0, 8, 8)                  # deadline 1.5 (policy default)
@@ -172,6 +228,123 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_allocator_refcount_invariants():
         pass
+
+
+def _spec_rollback_invariants(ops):
+    """No page leak, no double-free, and no speculative write span ever
+    covering a page the prefix cache holds or another slot maps, across
+    arbitrary interleavings of admit (with prefix-hit sharing) /
+    spec-grow+write / rollback / retire-and-insert / evict / tail-fork
+    (beam-style sharing of a mid-page tail — the case the copy-on-write
+    guard exists for)."""
+    import jax.numpy as jnp
+    from collections import Counter
+    from repro.sched import PrefixCache
+    from repro.serve.paged import set_block_table_rows
+    from repro.spec import (ensure_exclusive_tail, rollback_length,
+                            span_pages)
+    page, n_pages, n_slots, w_max = 4, 14, 3, 4
+    al = PageAllocator(n_pages, max_pages_per_slot=5, n_slots=n_slots)
+    pc = PrefixCache(al, page)
+    cache = {"kv": {
+        "k_pages": jnp.zeros((n_pages, page, 1, 4), jnp.bfloat16),
+        "v_pages": jnp.zeros((n_pages, page, 1, 4), jnp.bfloat16),
+        "k_scales": jnp.zeros((n_pages, 1), jnp.float32),
+        "v_scales": jnp.zeros((n_pages, 1), jnp.float32),
+        "block_table": jnp.zeros((n_slots, 5), jnp.int32),
+    }}
+    lengths, prompts = {}, {}
+    for kind, a, b in ops:
+        slot = a % n_slots
+        try:
+            if kind == 0 and slot not in lengths:
+                # admit: prompts are prefixes of one shared stream, so
+                # prefix-cache hits (page sharing) actually happen
+                plen = (b % 3 + 1) * page + 1
+                toks = np.arange(plen, dtype=np.int32) % 3
+                hit, pages = pc.lookup(toks)
+                al.assign(slot, pages,
+                          al.pages_needed(plen + w_max, page) - len(pages))
+                cache = set_block_table_rows(cache, np.asarray([slot]),
+                                             al.table[[slot]])
+                lengths[slot], prompts[slot] = plen, toks
+            elif kind == 1 and slot in lengths:
+                # spec round: grow for the verify span, COW any shared
+                # tail page, then advance by the accepted count
+                w = b % w_max + 1
+                start = lengths[slot]
+                need = al.pages_needed(start + w, page) \
+                    - len(al.owned(slot))
+                if need > 0:
+                    al.extend(slot, need)
+                    cache = set_block_table_rows(cache, np.asarray([slot]),
+                                                 al.table[[slot]])
+                cache = ensure_exclusive_tail(cache, al, slot, start,
+                                              start + w, page)
+                for li in span_pages(start, start + w, page):
+                    p = int(al.table[slot, li])
+                    assert al.refs[p] == 1, \
+                        "write span covers a shared/cache-held page"
+                assert list(np.asarray(cache["kv"]["block_table"])[slot]) \
+                    == list(al.table[slot])
+                lengths[slot] = start + b % (w + 1)   # rejected tail:
+            elif kind == 2 and slot in lengths:       # implicit rollback
+                # the engine always COWs the verify span BEFORE any spec
+                # work, so rollback's shared-page audit runs on an
+                # exclusive tail — replicate that protocol here
+                old = lengths[slot]
+                new = max(old - b % w_max, len(prompts[slot]))
+                cache = ensure_exclusive_tail(cache, al, slot, new, old,
+                                              page)
+                rollback_length(al, slot, old, new, page)
+                lengths[slot] = new
+            elif kind == 3 and slot in lengths:
+                toks = prompts[slot]
+                n_full = len(toks) // page
+                if n_full:
+                    pc.insert(toks[:n_full * page],
+                              al.owned(slot)[:n_full])
+                al.release(slot)
+                del lengths[slot]
+            elif kind == 4:
+                pc.evict_pages(b % 3 + 1)
+            elif kind == 5 and slot in lengths:
+                # beam-style fork: another slot maps the SAME pages
+                # (incl. the mid-page tail) — the next spec round on
+                # either slot must copy-on-write, never share-write
+                other = (slot + 1) % n_slots
+                if other not in lengths:
+                    al.assign(other, al.owned(slot), 0)
+                    cache = set_block_table_rows(
+                        cache, np.asarray([other]), al.table[[other]])
+                    lengths[other] = lengths[slot]
+                    prompts[other] = prompts[slot]
+        except OutOfPagesError:
+            pass
+        free = al.free
+        assert len(set(free)) == len(free), "page duplicated in free list"
+        assert 0 not in free, "null page leaked into the free list"
+        want = Counter(nd["page"] for nd in pc.nodes.values())
+        for s in range(n_slots):
+            want.update(al.owned(s))
+        for p in range(1, n_pages):
+            assert al.refs[p] == want[p], f"page {p} refcount drift"
+            assert (al.refs[p] == 0) == (p in free), \
+                f"page {p} neither free nor referenced (leak/double-free)"
+
+
+if _HAS_HYPOTHESIS:
+    @settings(deadline=None, max_examples=40)
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                              st.integers(0, 6)), max_size=40))
+    def test_spec_rollback_invariants(ops):
+        _spec_rollback_invariants(ops)
+else:
+    def test_spec_rollback_invariants():
+        _spec_rollback_invariants(
+            [(0, 0, 2), (1, 0, 3), (5, 0, 0), (1, 0, 3), (1, 1, 2),
+             (2, 0, 2), (3, 0, 0), (0, 0, 1), (1, 0, 1), (4, 0, 2),
+             (3, 1, 0), (3, 0, 0), (4, 0, 5)])
 
 
 def test_unref_below_zero_raises():
