@@ -20,6 +20,12 @@ JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``):
 * ``prefix_cache`` — warm vs cold comparison on the shared-prefix
   workload: prefill tokens computed with the prefix cache on/off, their
   ratio, and whether greedy outputs were token-identical.
+* ``chunk_prefill`` (``--chunk-bench``) — the fused prefix-extend
+  chunked-prefill kernel vs the retired eager full-horizon gather
+  (``chunk_prefill_impl="eager"``, ref.py oracle) on the same trace:
+  prefill-phase tokens/sec, TTFT p50/p99, analytic peak context bytes,
+  greedy token identity, and (with ``--shared-prefix``) warm==cold
+  identity.  CI writes this to ``BENCH_chunk_prefill.json``.
 * ``spec_decoding`` (``--spec ngram|draft``) — SpecEngine vs the
   non-speculative scheduler on the same trace: measured draft
   acceptance rate, accepted drafts and tokens per slot-step, verify /
@@ -27,6 +33,11 @@ JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``):
   token-identity (the rollback-exactness check; ``--repetitive N``
   tiles an N-token pattern per prompt — the workload where the n-gram
   drafter wins).  CI writes this to ``BENCH_spec_decoding.json``.
+
+Every engine row additionally reports ``prefill_phase`` /
+``decode_phase`` tokens/sec against each phase's own dispatch
+wall-clock — the aggregate tokens/sec otherwise hides prefill
+regressions behind decode throughput.
 
 Latency accounting: TTFT is measured from ``submit()`` (arrival), NOT
 from admission — under load the queue wait is the scheduler's doing and
@@ -72,6 +83,13 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
     per-request submit offsets in seconds) and return (metrics row,
     per-request out_tokens in submit order)."""
     from repro.serve.engine import run_open_loop
+    # snapshot cumulative counters so a reused engine (warmed-up second
+    # pass) reports this drive's deltas, not its lifetime totals
+    t_pf0 = getattr(eng, "t_prefill_s", 0.0)
+    t_dec0 = getattr(eng, "t_decode_s", 0.0)
+    pt0 = eng.stats.prefill_tokens if hasattr(eng, "stats") else 0
+    sync0 = getattr(eng, "sync_count", 0)
+    steps0 = getattr(eng, "steps_dispatched", 0)
     t0 = time.perf_counter()
     if arrivals is None:
         ids = [eng.submit(p, max_new_tokens=max_new,
@@ -128,12 +146,33 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
             "goodput_tokens_per_sec": round(met_both_tokens / dt, 2),
         }
     if hasattr(eng, "sync_count"):
-        row["host_syncs"] = eng.sync_count
-        row["decode_steps"] = eng.steps_dispatched
-        row["tokens_per_sync"] = round(n_tok / max(eng.sync_count, 1), 2)
+        syncs = eng.sync_count - sync0
+        row["host_syncs"] = syncs
+        row["decode_steps"] = eng.steps_dispatched - steps0
+        row["tokens_per_sync"] = round(n_tok / max(syncs, 1), 2)
     else:
         row["host_syncs"] = n_tok          # eager: one sync per token
         row["tokens_per_sync"] = 1.0
+    if hasattr(eng, "t_prefill_s"):
+        # phase split: aggregate tokens/sec hides a prefill regression
+        # behind decode throughput — report each phase against its own
+        # dispatch wall-clock (prefill tokens = tokens actually computed,
+        # i.e. prefix-cache hits excluded under the scheduler)
+        p_toks = (eng.stats.prefill_tokens - pt0 if hasattr(eng, "stats")
+                  else sum(len(done[i].prompt) for i in ids))
+        d_toks = max(n_tok - len(ids), 0)  # first tokens: prefill phase
+        pf_s = eng.t_prefill_s - t_pf0
+        dec_s = eng.t_decode_s - t_dec0
+        row["prefill_phase"] = {
+            "tokens": int(p_toks),
+            "seconds": round(pf_s, 3),
+            "tokens_per_sec": round(p_toks / max(pf_s, 1e-9), 2),
+        }
+        row["decode_phase"] = {
+            "tokens": int(d_toks),
+            "seconds": round(dec_s, 3),
+            "tokens_per_sec": round(d_toks / max(dec_s, 1e-9), 2),
+        }
     if hasattr(eng, "telemetry"):
         # attainment already lives in row["slo"] (one source of truth)
         row["sched"] = {k: v for k, v in eng.telemetry().items()
@@ -201,7 +240,14 @@ def main(argv=None):
                     help="open-loop Poisson arrivals, requests/sec "
                          "(0: closed loop, submit everything upfront)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="scheduler prefill chunk tokens (page multiple)")
+                    help="scheduler prefill chunk tokens (page multiple; "
+                         "default 8 pages)")
+    ap.add_argument("--chunk-bench", action="store_true",
+                    help="benchmark chunked prefill fused-kernel vs "
+                         "eager-gather (chunk_prefill_impl) on the same "
+                         "trace: prefill-phase tokens/sec, TTFT "
+                         "percentiles, peak context bytes, token "
+                         "identity -> 'chunk_prefill' section")
     # ---- speculative decoding (repro.spec) ------------------------------
     ap.add_argument("--spec", default="none",
                     choices=["none", "ngram", "draft"],
@@ -359,6 +405,92 @@ def main(argv=None):
               f"{pc['warm_prefill_tokens']} prefill tokens "
               f"({pc['prefill_reduction']}x), token-identical: "
               f"{pc['token_identical']}")
+
+    # ---- chunked prefill: fused prefix-extend kernel vs eager gather ----
+    # (same trace, same scheduler; the eager arm is the retired
+    # full-horizon gather kept as the ref.py oracle, selected via
+    # chunk_prefill_impl="eager".  Tracked claims: greedy token identity,
+    # the prefill-phase tokens/sec ratio, and the analytic peak context
+    # bytes — the kernel streams one (page, head_dim) tile per grid step
+    # while the gather materialized every slot's full padded horizon in
+    # fp32 per layer per chunk.)
+    if args.chunk_bench:
+        from repro.kvcache import CacheSpec
+        from repro.sched import SchedEngine
+        pol = policies[0] if policies else "fcfs"
+        ckw = dict(n_slots=args.slots, max_len=args.max_len,
+                   seed=args.seed, page_size=args.page_size,
+                   decode_block=args.decode_block,
+                   prefill_chunk=args.prefill_chunk, policy=pol)
+        runs = {}
+        for name, lm_run in (
+                ("fused", lm_paged),
+                ("eager", LM(lm_paged.cfg.with_(chunk_prefill_impl="eager"))),
+        ):
+            eng = SchedEngine(lm_run, params, prefix_cache=False, **ckw)
+            # first drive compiles every bucketed dispatch shape; the
+            # measured second drive is steady-state (run_engine reports
+            # per-drive counter deltas)
+            run_engine(eng, prompts, args.max_new, args.temperature,
+                       arrivals=arrivals)
+            row, outs = run_engine(eng, prompts, args.max_new,
+                                   args.temperature, arrivals=arrivals)
+            runs[name] = (row, outs, eng)
+        warm_identical = None
+        if args.shared_prefix > 0:
+            weng = SchedEngine(lm_paged, params, prefix_cache=True, **ckw)
+            _, wouts = run_engine(weng, prompts, args.max_new,
+                                  args.temperature, arrivals=arrivals)
+            warm_identical = wouts == runs["fused"][1]
+        f_row, e_row = runs["fused"][0], runs["eager"][0]
+        eng = runs["fused"][2]
+        a = lm_paged.cfg.attention
+        kvh_store = CacheSpec(style=lm_paged.cfg.kv_cache_style) \
+            .stored_kv_heads(a)
+        elt = 1 if kv_dtype in ("int8", "fp8") else 2
+        w_pad = eng.prefill_chunk            # kernel W (pow2 chunk sizes)
+        peak = {
+            # per layer, per chunk dispatch: every row's full padded page
+            # horizon gathered to fp32 K and V
+            "eager_gather": args.slots * eng.alloc.max_pages_per_slot
+            * args.page_size * kvh_store * a.head_dim * 4 * 2,
+            # per grid step: one K + one V (page, head_dim) pool tile at
+            # stored bytes, plus the fresh chunk block for one kv head
+            "fused_kernel_tile": 2 * args.page_size * a.head_dim * elt
+            + 2 * w_pad * a.head_dim * 2,
+        }
+        peak["ratio"] = round(peak["eager_gather"]
+                              / peak["fused_kernel_tile"], 1)
+        fp = f_row["prefill_phase"]["tokens_per_sec"]
+        ep = e_row["prefill_phase"]["tokens_per_sec"]
+        results["chunk_prefill"] = {
+            "policy": pol,
+            "prefill_chunk": eng.prefill_chunk,
+            "kv_dtype": kv_dtype,
+            "fused": {"prefill_phase": f_row["prefill_phase"],
+                      "tokens_per_sec": f_row["tokens_per_sec"],
+                      "ttft_ms": f_row["ttft_ms"],
+                      "wall_s": f_row["wall_s"]},
+            "eager": {"prefill_phase": e_row["prefill_phase"],
+                      "tokens_per_sec": e_row["tokens_per_sec"],
+                      "ttft_ms": e_row["ttft_ms"],
+                      "wall_s": e_row["wall_s"]},
+            "speedup_prefill_tokens_per_sec": round(fp / max(ep, 1e-9), 3),
+            "ttft_p50_speedup": (round(e_row["ttft_ms"]["p50"]
+                                       / f_row["ttft_ms"]["p50"], 3)
+                                 if f_row["ttft_ms"]["p50"] else None),
+            "peak_context_bytes": peak,
+            "token_identical": runs["fused"][1] == runs["eager"][1],
+            "warm_cold_token_identical": warm_identical,
+        }
+        cp = results["chunk_prefill"]
+        print(f"[bench] chunk : fused {fp:8.1f} -> eager {ep:8.1f} "
+              f"prefill tok/s ({cp['speedup_prefill_tokens_per_sec']}x), "
+              f"ttft p50 {f_row['ttft_ms']['p50']} vs "
+              f"{e_row['ttft_ms']['p50']} ms, ctx bytes "
+              f"{peak['ratio']}x smaller, token-identical: "
+              f"{cp['token_identical']} (warm==cold: "
+              f"{cp['warm_cold_token_identical']})")
 
     # ---- speculative decoding: SpecEngine vs the scheduler baseline -----
     # (same trace, same policy; greedy spec output must be token-identical

@@ -169,6 +169,12 @@ class ModelConfig:
     # serve/engine.PagedEngine with on-device sampling and a fused
     # multi-token decode loop)
     decode_attn_impl: str = "eager"
+    # chunked-prefill continuation / spec-verify attention against paged
+    # pools: "fused" streams pages through the width-parameterized
+    # prefix-extend Pallas kernel (no full-horizon context is ever
+    # materialized); "eager" falls back to the ref.py full-horizon gather
+    # oracle (debug / A-B benchmarking only)
+    chunk_prefill_impl: str = "fused"  # fused | eager
     kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 | fp8 (repro.kvcache)
     kv_cache_style: str = "full"      # full | gqa | mqa (AE-LLM c_inf arm)
     quant: str = "bf16"               # bf16 | fp8 | int8 | int4  (weights)

@@ -121,6 +121,51 @@ def _flops_per_token(cfg: ModelConfig, ctx_len: int) -> float:
     return 2.0 * n_act + attn_fl
 
 
+def chunk_prefill_hbm_bytes(cfg: ModelConfig, prompt: int, *, chunk: int,
+                            fused: bool = True, horizon: int = None,
+                            batch: int = 1) -> float:
+    """HBM bytes for a CHUNKED prefill of ``prompt`` tokens against a
+    paged cache, ``chunk`` tokens per dispatch (``repro.sched``'s
+    continuation path).
+
+    ``fused=True`` prices the streamed prefix-extend kernel
+    (``kernels/paged_attention``): each chunk reads the active weights
+    once, streams only its ACTUAL prefix from the pages at stored pool
+    bytes (int8/fp8 pools stream at 1 byte/elem — the fused dequant
+    never materializes an fp32 copy), and writes the chunk once.
+
+    ``fused=False`` prices the retired eager gather that used to live in
+    models/attention.py: every chunk materialized the slot's full padded
+    page ``horizon`` (default: the prompt's own page span; the real code
+    gathered the whole block-table row) as an fp32 context — pool read +
+    fp32 write + fp32 read-back — regardless of how little prefix
+    existed yet.  That full-horizon term is what used to cap chunk sizes
+    and dominate warm-admission TTFT.
+
+    ``batch`` scales the per-row stream/write terms only: one chunk
+    dispatch serves every row, so the active weights are read once per
+    chunk regardless of batch."""
+    kv_tok = _kv_bytes_per_token(cfg)
+    # fp32 bytes/token of a dequantized context copy = 2x the bf16 store
+    # (bf16 carries no scale tensors, so this is exactly the element
+    # bytes doubled)
+    f32_tok = 2.0 * _kv_bytes_per_token(cfg.with_(kv_cache_dtype="bfloat16"))
+    awbytes = _active_weight_bytes(cfg)
+    prompt = max(int(prompt), 1)
+    chunk = max(int(chunk), 1)
+    # closed form (this sits on the scheduler's per-tick policy path):
+    # chunk i starts at prefix i*chunk, so streamed prefixes sum to
+    # chunk * n(n-1)/2 and the chunk writes sum to the prompt
+    n = -(-prompt // chunk)
+    total = n * awbytes + batch * prompt * kv_tok        # weights + writes
+    if fused:
+        total += batch * kv_tok * chunk * n * (n - 1) / 2.0
+    else:
+        hz = horizon if horizon is not None else prompt
+        total += batch * n * hz * (kv_tok + 2.0 * f32_tok)
+    return total
+
+
 def _peak_flops(cfg: ModelConfig) -> float:
     """Per-chip peak FLOPs for this config (int8 weights run the MXU at
     2× bf16 throughput) — the ONE place the rate is defined for both the
@@ -146,7 +191,8 @@ def _decode_collective_s(cfg: ModelConfig, tier: HwTier,
 
 
 def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
-                     prompt: int, gen: int) -> Dict[str, float]:
+                     prompt: int, gen: int,
+                     chunk: int = None) -> Dict[str, float]:
     """Per-request roofline work estimate for scheduler policies
     (``repro.sched.policy``): prefill seconds and per-decode-token
     seconds for ONE request at batch 1 on ``tier`` — the same rooflines
@@ -155,14 +201,23 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
     cost model steers the *runtime*: shortest-job-first ranks by
     ``t_total_s`` and deadline-EDF converts it into slack.  Absolute
     numbers are tier-relative; what matters is the ranking they induce
-    across requests of different prompt/generation lengths."""
+    across requests of different prompt/generation lengths.
+
+    ``chunk`` prices the scheduler's chunked prefill: per-chunk weight
+    re-reads plus STREAMED prefix pages (the fused prefix-extend kernel;
+    :func:`chunk_prefill_hbm_bytes`), not the retired full-horizon
+    gather."""
     awbytes = _active_weight_bytes(cfg)
     kv_tok = _kv_bytes_per_token(cfg)
     prompt = max(int(prompt), 1)
     gen = max(int(gen), 0)
+    if chunk is not None and prompt > chunk:
+        by_pf = chunk_prefill_hbm_bytes(cfg, prompt, chunk=chunk)
+    else:
+        by_pf = awbytes + prompt * kv_tok
     t_pf = _roofline_s(cfg, tier,
                        prompt * _flops_per_token(cfg, max(prompt // 2, 1)),
-                       awbytes + prompt * kv_tok)
+                       by_pf)
     ctx = prompt + max(gen, 1) // 2
     t_dec = _roofline_s(cfg, tier, _flops_per_token(cfg, ctx),
                         awbytes + ctx * kv_tok) \
@@ -173,7 +228,8 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
 
 def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
             prompt: int = 512, gen: int = 128, batch: int = 1,
-            spec_accept_rate: float = None) -> Dict[str, float]:
+            spec_accept_rate: float = None,
+            prefill_chunk: int = None) -> Dict[str, float]:
     cfg = apply_efficiency_config(cfg_base, eff)
     chips = tier.chips
     peak = _peak_flops(cfg)
@@ -183,8 +239,17 @@ def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
     kv_tok = _kv_bytes_per_token(cfg)
 
     # ---- prefill: compute-bound region ------------------------------------
+    # ``prefill_chunk`` prices serving-style chunked prefill at the fused
+    # kernel's streamed-page bytes (chunk_prefill_hbm_bytes) instead of
+    # the one-shot slab — the chunked-prefill arm's latency profile now
+    # matches what the runtime actually executes.
     fl_prefill = batch * prompt * _flops_per_token(cfg, prompt // 2)
-    by_prefill = awbytes + batch * prompt * kv_tok
+    if prefill_chunk is not None and prompt > prefill_chunk:
+        by_prefill = chunk_prefill_hbm_bytes(cfg, prompt,
+                                             chunk=prefill_chunk,
+                                             batch=batch)
+    else:
+        by_prefill = awbytes + batch * prompt * kv_tok
     t_prefill = _roofline_s(cfg, tier, fl_prefill, by_prefill)
 
     # ---- decode: memory-bound region (reads active weights + KV/step) ----

@@ -1,9 +1,16 @@
-"""Public op: paged decode attention with kernel/oracle dispatch.
+"""Public ops: paged decode + prefix-extend attention, kernel/oracle
+dispatch.
 
-bf16/fp32 pools run the plain kernel; int8/fp8 pools (with their
+bf16/fp32 pools run the plain kernels; int8/fp8 pools (with their
 per-page-per-kv-head scales from ``repro.kvcache``) run the fused-dequant
-variant.  Off-TPU the kernel runs in interpret mode, so the engine tests
+variants.  Off-TPU the kernels run in interpret mode, so the engine tests
 cover the exact artifact that runs on TPU.
+
+``paged_prefix_extend_attention`` is the ONE multi-query entry point:
+speculative verify (W = draft_k + 1, prefix = committed lengths) and
+chunked prefill continuation (W = chunk width, prefix = the chunk's
+page-aligned start) both dispatch through it, so the two instantiations
+can never drift.
 """
 from __future__ import annotations
 
@@ -12,32 +19,35 @@ from typing import Optional
 import jax
 
 from repro.kernels.paged_attention.ref import (paged_attention_ref,
-                                               paged_verify_attention_ref)
+                                               paged_prefix_extend_ref)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def paged_verify_attention(q, k_pages, v_pages, block_table, lengths,
-                           chunk_k, chunk_v, widths,
-                           k_scales: Optional[jax.Array] = None,
-                           v_scales: Optional[jax.Array] = None, *,
-                           use_kernel: bool = True) -> jax.Array:
-    """Speculative-verify attention: q (S,W,H,D) queries at logical
-    positions ``lengths[s] + [0, W)`` against the paged prefix plus the
-    chunk's own fresh K/V (``chunk_k``/``chunk_v`` (S,W,KH,D), causal up
-    to ``widths[s]``) -> (S,W,H,D).  One dispatch scores all W draft
-    positions — the multi-query extension of :func:`paged_attention`."""
+def paged_prefix_extend_attention(q, k_pages, v_pages, block_table,
+                                  prefix_lens, chunk_k, chunk_v, widths,
+                                  k_scales: Optional[jax.Array] = None,
+                                  v_scales: Optional[jax.Array] = None, *,
+                                  use_kernel: bool = True) -> jax.Array:
+    """Multi-query prefix-extend attention: q (S,W,H,D) queries at
+    logical positions ``prefix_lens[s] + [0, W)`` against the paged
+    prefix plus the chunk's own fresh K/V (``chunk_k``/``chunk_v``
+    (S,W,KH,D), causal up to ``widths[s]``) -> (S,W,H,D).  One dispatch
+    scores all W positions — the multi-query extension of
+    :func:`paged_attention`; ``use_kernel=False`` (or the eager
+    ``chunk_prefill_impl``) falls back to the full-horizon gather
+    oracle."""
     if use_kernel:
         from repro.kernels.paged_attention.paged_attention import (
-            paged_verify_attention_pallas)
-        return paged_verify_attention_pallas(
-            q, k_pages, v_pages, block_table, lengths, chunk_k, chunk_v,
+            paged_prefix_extend_pallas)
+        return paged_prefix_extend_pallas(
+            q, k_pages, v_pages, block_table, prefix_lens, chunk_k, chunk_v,
             widths, k_scales, v_scales, interpret=not _on_tpu())
-    return paged_verify_attention_ref(q, k_pages, v_pages, block_table,
-                                      lengths, chunk_k, chunk_v, widths,
-                                      k_scales, v_scales)
+    return paged_prefix_extend_ref(q, k_pages, v_pages, block_table,
+                                   prefix_lens, chunk_k, chunk_v, widths,
+                                   k_scales, v_scales)
 
 
 def paged_attention(q, k_pages, v_pages, block_table, lengths,

@@ -28,6 +28,13 @@ inner loop — the K scale folds into the score scale (``(q·k_q)·s·k_s``)
 and the V scale folds into the p·v accumulation (``(p·v_q)·v_s``), so no
 dequantized page is ever materialized in HBM or VMEM.  Streaming int8
 pages halves the decode HBM traffic vs bf16.
+
+Two kernels share this machinery: ``_paged_kernel`` is single-query
+decode (one token per slot), and ``_prefix_extend_kernel`` is the
+width-parameterized multi-query generalization — W queries per slot
+against the paged prefix plus a fresh causal chunk — instantiated at
+W = draft_k + 1 for speculative verify and W = chunk width for chunked
+prefill continuation (one entry point for both; see ops.py).
 """
 from __future__ import annotations
 
@@ -101,15 +108,28 @@ def _paged_kernel(*refs, scale: float, page_size: int, n_page_blocks: int,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-def _verify_kernel(*refs, scale: float, page_size: int, n_page_blocks: int,
-                   group: int, width: int, quantized: bool):
-    """Speculative-verify variant: W query positions per slot.  Grid =
-    (slots, kv_heads, page_blocks + 1); the first ``n_page_blocks`` steps
-    stream the cached prefix exactly like ``_paged_kernel`` (every query
-    sees the whole prefix — uniform mask), and the FINAL step attends the
-    chunk's own fresh K/V causally (query w sees chunk keys j <= w,
-    j < widths[slot]).  Online-softmax state is (W·G, ·) so the chunk's
-    queries share one scratch walk."""
+def _prefix_extend_kernel(*refs, scale: float, page_size: int,
+                          n_page_blocks: int, group: int, width: int,
+                          quantized: bool):
+    """Width-parameterized prefix-extend attention: W query positions per
+    slot against the slot's paged prefix plus a fresh causal chunk.  Grid
+    = (slots, kv_heads, page_blocks + 1); the first ``n_page_blocks``
+    steps stream the cached prefix exactly like ``_paged_kernel`` (every
+    query sees the whole prefix — uniform mask over positions <
+    prefix_lens[slot]), and the FINAL step attends the chunk's own fresh
+    K/V causally (query w sees chunk keys j <= w, j < widths[slot]).
+    Online-softmax state is (W·G, ·) so the chunk's queries share one
+    scratch walk.
+
+    One kernel, two instantiations: speculative verify runs it at
+    W = draft_k + 1 (prefix = committed lengths, chunk = draft K/V held
+    OUT of the pages for write-after-accept), and chunked prefill runs it
+    at W = chunk width (prefix = the chunk's page-aligned start, chunk =
+    the chunk's own K/V — already scattered into the pages but attended
+    from the fresh activations).  Pages past the prefix are skipped with
+    ``pl.when``, so a chunk's cost is O(prefix + W), not O(page horizon):
+    that is what replaces the eager full-horizon gather of the old
+    ``attention_prefill_paged`` (now the oracle in ref.py)."""
     if quantized:
         (bt_ref, len_ref, wid_ref, ks_ref, vs_ref,
          q_ref, k_ref, v_ref, ck_ref, cv_ref, o_ref,
@@ -186,14 +206,16 @@ def _verify_kernel(*refs, scale: float, page_size: int, n_page_blocks: int,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_verify_attention_pallas(q, k_pages, v_pages, block_table, lengths,
-                                  chunk_k, chunk_v, widths,
-                                  k_scales=None, v_scales=None, *,
-                                  interpret: bool = False) -> jax.Array:
-    """q: (S,W,H,D) — W speculative query positions per slot at logical
-    positions ``lengths[s] + [0, W)``; chunk_k/chunk_v: (S,W,KH,D) fresh
-    (not-yet-committed) K/V attended causally up to ``widths[s]``;
-    everything else as :func:`paged_attention_pallas` -> (S,W,H,D)."""
+def paged_prefix_extend_pallas(q, k_pages, v_pages, block_table,
+                               prefix_lens, chunk_k, chunk_v, widths,
+                               k_scales=None, v_scales=None, *,
+                               interpret: bool = False) -> jax.Array:
+    """q: (S,W,H,D) — W query positions per slot at logical positions
+    ``prefix_lens[s] + [0, W)``; chunk_k/chunk_v: (S,W,KH,D) fresh K/V
+    attended causally up to ``widths[s]``; everything else as
+    :func:`paged_attention_pallas` -> (S,W,H,D).  Spec verify calls this
+    at W = k+1 (prefix = committed lengths), chunked prefill at W =
+    chunk width (prefix = the chunk's page-aligned start)."""
     s_n, w_n, h, d = q.shape
     _, page, kh, _ = k_pages.shape
     assert h % kh == 0, (h, kh)
@@ -217,8 +239,8 @@ def paged_verify_attention_pallas(q, k_pages, v_pages, block_table, lengths,
                               lambda s, k, p, bt, *_: (s, 0, k, 0))
     o_spec = pl.BlockSpec((1, 1, w_n * g, d),
                           lambda s, k, p, bt, *_: (s, k, 0, 0))
-    prefetch = [block_table.astype(jnp.int32), lengths.astype(jnp.int32),
-                widths.astype(jnp.int32)]
+    prefetch = [block_table.astype(jnp.int32),
+                prefix_lens.astype(jnp.int32), widths.astype(jnp.int32)]
     if quantized:
         prefetch += [k_scales.astype(jnp.float32),
                      v_scales.astype(jnp.float32)]
@@ -233,7 +255,7 @@ def paged_verify_attention_pallas(q, k_pages, v_pages, block_table, lengths,
             pltpu.VMEM((w_n * g, d), jnp.float32),
         ])
     out = pl.pallas_call(
-        functools.partial(_verify_kernel, scale=scale, page_size=page,
+        functools.partial(_prefix_extend_kernel, scale=scale, page_size=page,
                           n_page_blocks=p_n, group=g, width=w_n,
                           quantized=quantized),
         grid_spec=grid_spec,

@@ -9,6 +9,11 @@ plain ``jax.nn.softmax`` would return a uniform distribution there.
 Quantized pools (int8 / fp8, ``repro.kvcache``) pass per-page-per-kv-head
 fp32 amax scales; the oracle dequantizes the gathered pages up front —
 the readable counterpart of the kernel's fused dequant.
+
+``paged_prefix_extend_ref`` is additionally the surviving home of the
+eager chunked-prefill gather: models/attention.py used to carry its own
+copy of this full-horizon gather + dense softmax; that hot path now runs
+the fused kernel and falls back here only through the ops dispatch.
 """
 from __future__ import annotations
 
@@ -20,24 +25,31 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_verify_attention_ref(q: jax.Array, k_pages: jax.Array,
-                               v_pages: jax.Array, block_table: jax.Array,
-                               lengths: jax.Array, chunk_k: jax.Array,
-                               chunk_v: jax.Array, widths: jax.Array,
-                               k_scales: Optional[jax.Array] = None,
-                               v_scales: Optional[jax.Array] = None,
-                               ) -> jax.Array:
-    """Multi-query (speculative verify) paged attention oracle.
+def paged_prefix_extend_ref(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_table: jax.Array,
+                            prefix_lens: jax.Array, chunk_k: jax.Array,
+                            chunk_v: jax.Array, widths: jax.Array,
+                            k_scales: Optional[jax.Array] = None,
+                            v_scales: Optional[jax.Array] = None,
+                            ) -> jax.Array:
+    """Multi-query prefix-extend attention oracle — the eager full-
+    horizon gather the fused kernel replaces (this is the old
+    ``attention_prefill_paged`` gather, kept as the reference and the
+    off-kernel fallback).
 
     q: (S, W, H, D) — W query positions per slot, query ``w`` sitting at
-    logical position ``lengths[s] + w``; k_pages/v_pages hold the cached
-    prefix (positions < lengths[s]).  The chunk's own K/V
-    (``chunk_k``/``chunk_v``: (S, W, KH, D), fresh bf16 — NOT yet in the
-    pages: write-after-accept, see repro.spec) is attended causally
-    in-chunk: query ``w`` sees chunk keys ``j <= w`` with ``j <
-    widths[s]``.  Queries at ``w >= widths[s]`` are padding; their
-    outputs are garbage the engine masks.  -> (S, W, H, D).
+    logical position ``prefix_lens[s] + w``; k_pages/v_pages hold the
+    cached prefix (positions < prefix_lens[s] are attended; anything the
+    pages hold at or past the prefix — e.g. a prefill chunk's own
+    just-scattered rows — is masked in favour of the fresh chunk).  The
+    chunk's own K/V (``chunk_k``/``chunk_v``: (S, W, KH, D), fresh — for
+    spec verify deliberately NOT yet in the pages: write-after-accept,
+    see repro.spec) is attended causally in-chunk: query ``w`` sees
+    chunk keys ``j <= w`` with ``j < widths[s]``.  Queries at ``w >=
+    widths[s]`` are padding; their outputs are garbage the engine masks.
+    -> (S, W, H, D).
     """
+    lengths = prefix_lens
     s_n, w_n, h, d = q.shape
     _, page, kh, _ = k_pages.shape
     p_n = block_table.shape[1]

@@ -56,7 +56,16 @@ def main(argv=None):
                          "(--policy only)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="scheduler prefill chunk in tokens (multiple of "
-                         "--page-size; default 4 pages)")
+                         "--page-size; default 8 pages — the fused "
+                         "prefix-extend kernel streams the prefix, so "
+                         "chunk size no longer bounds an eager context)")
+    ap.add_argument("--chunk-prefill-impl", default="fused",
+                    choices=["fused", "eager"],
+                    help="chunked-prefill / spec-verify attention against "
+                         "the paged pools: 'fused' streams pages through "
+                         "the width-parameterized prefix-extend Pallas "
+                         "kernel; 'eager' is the ref.py full-horizon "
+                         "gather oracle (debug / A-B only)")
     ap.add_argument("--slo-ttft", type=float, default=None,
                     help="TTFT SLO target in ms (EDF deadlines + "
                          "telemetry)")
@@ -107,7 +116,8 @@ def main(argv=None):
     cfg = cfg.with_(kv_cache_style=args.kv_style
                     if cfg.attention is not None else "full",
                     kv_cache_dtype=normalize_dtype(args.kv_dtype)
-                    if cfg.attention is not None else "bfloat16")
+                    if cfg.attention is not None else "bfloat16",
+                    chunk_prefill_impl=args.chunk_prefill_impl)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     if args.quant != "bf16":

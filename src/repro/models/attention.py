@@ -6,6 +6,10 @@ Entry points per layer:
   * ``attention_decode_paged`` — one-token step, all slots, against paged
     KV pools via the Pallas flash-decoding kernel
     (``kernels/paged_attention``; page bookkeeping in ``repro.serve.paged``)
+  * ``attention_prefill_paged`` / ``attention_verify_paged`` — W-query
+    steps against paged pools plus a fresh causal chunk, both through the
+    ONE width-parameterized prefix-extend kernel (W = chunk width for
+    chunked prefill continuation, W = draft_k + 1 for spec verify)
 
 Cache allocation / writes / dequant live in ``repro.kvcache`` (the one
 implementation for every layout × dtype × style combination); this module
@@ -369,34 +373,43 @@ def attention_prefill(p: dict, x: jax.Array, a: AttentionConfig, cache: dict, *,
 
 
 def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
-                            cache: dict, spos, *,
-                            style: str = "full") -> tuple[jax.Array, dict]:
+                            cache: dict, spos, *, style: str = "full",
+                            use_kernel: bool = True) -> tuple[jax.Array, dict]:
     """Chunked / continuation prefill directly against a paged KV cache.
 
-    x: (B, c, d) — one prompt chunk per admitted row; ``spos`` is the
-    triple ``(slot_ids (B,), starts (B,), lengths (B,))``: row b's chunk
-    covers logical positions ``starts[b] .. starts[b]+lengths[b]-1`` of
-    slot ``slot_ids[b]`` (rows right-padded to the common width c).
+    x: (B, c, d) — one prompt chunk per admitted row; ``spos`` is
+    ``(slot_ids (B,), starts (B,), lengths (B,))``: row b's chunk covers
+    logical positions ``starts[b] .. starts[b]+lengths[b]-1`` of slot
+    ``slot_ids[b]`` (rows right-padded to the common width c).  An
+    optional 4th entry ``max_pages`` (static python int) narrows the
+    kernel's page grid to the first ``max_pages`` block-table columns —
+    the scheduler passes the pow2-bucketed page span of the batch's
+    deepest prefix, so grid steps scale with the ACTUAL context, not the
+    slot's full page horizon (the eager oracle keeps the full horizon:
+    that is exactly the old gather's cost being benchmarked against).
 
     The chunk's K/V is written into the slot's pages (quantized pools
     reset each touched page's scale, so ``starts`` must be page-aligned)
-    and its queries attend over ``[0, starts[b]+i]``: the already-cached
-    prefix is gathered from the pages (dequantized when quantized) while
-    the chunk attends to its own fresh bf16 K/V.  A prefix-cache warm
-    start and a cold chunked run therefore execute the SAME computation
-    for any continuation chunk — that is what makes shared-prefix
-    admission token-identical to a cold cache.  Eager gather reference
-    (one (B, pages·page) context per layer); a fused Pallas chunk-prefill
-    kernel is an open roadmap item.
+    and its queries attend over ``[0, starts[b]+i]`` through the shared
+    prefix-extend dispatch (``kernels/paged_attention``): the cached
+    prefix is STREAMED page by page (dequant fused when quantized) while
+    the chunk attends to its own fresh K/V causally — the same kernel
+    speculative verify runs at W = draft_k + 1, here at W = chunk width.
+    No full-horizon context is materialized; the old eager gather
+    survives only as the ref.py oracle (``use_kernel=False``).  A
+    prefix-cache warm start and a cold chunked run execute the SAME
+    computation for any continuation chunk — that is what makes
+    shared-prefix admission token-identical to a cold cache.
     """
     from repro import kvcache
+    from repro.kernels.paged_attention.ops import paged_prefix_extend_attention
     if a.window is not None:
         raise NotImplementedError("paged prefill: sliding window unsupported")
-    slot_ids, starts, lengths = spos
+    slot_ids, starts, lengths, *rest = spos
+    max_pages = rest[0] if rest else None
     b, c, _ = x.shape
     kvh = a.kv_heads_effective()
     kvh_store = cache["k_pages"].shape[2]
-    g = a.heads_padded // kvh_store
 
     apos = starts[:, None] + jnp.arange(c)[None, :]              # (B,c)
     q = linear_apply(p["wq"], x).reshape(b, c, a.heads_padded, a.head_dim)
@@ -415,40 +428,18 @@ def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
     cache = kvcache.paged_scatter_prefill(cache, slot_ids, lengths,
                                           k_new, v_new, starts)
 
-    # gather the cached prefix (positions < starts[b]; the chunk's own
-    # just-scattered rows are masked out in favour of the fresh values)
+    # prefix < starts[b] streamed from the pages; the chunk's own
+    # just-scattered rows are masked out in favour of the fresh values
     kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
     rows = bt[slot_ids]                                          # (B,P)
-    page = kp.shape[1]
-    t = rows.shape[1] * page
-    k_ctx, v_ctx = kp[rows], vp[rows]                # (B,P,page,KH,D)
-    if k_sc is not None:
-        k_ctx = kvcache.dequantize(k_ctx, k_sc[rows][:, :, None, :])
-        v_ctx = kvcache.dequantize(v_ctx, v_sc[rows][:, :, None, :])
-    k_ctx = k_ctx.reshape(b, t, kvh_store, a.head_dim)
-    v_ctx = v_ctx.reshape(b, t, kvh_store, a.head_dim)
-
-    scale = 1.0 / jnp.sqrt(a.head_dim).astype(jnp.float32)
-    qg = q.reshape(b, c, kvh_store, g, a.head_dim).astype(jnp.float32)
-    s_ctx = jnp.einsum("bskgd,btkd->bkgst", qg,
-                       k_ctx.astype(jnp.float32)) * scale
-    ctx_ok = jnp.arange(t)[None, :] < starts[:, None]            # (B,T)
-    s_ctx = jnp.where(ctx_ok[:, None, None, None, :], s_ctx, NEG_INF)
-    s_chk = jnp.einsum("bskgd,btkd->bkgst", qg,
-                       k_new.astype(jnp.float32)) * scale
-    ii = jnp.arange(c)
-    chk_ok = (ii[None, :] <= ii[:, None])[None] \
-        & (ii[None, None, :] < lengths[:, None, None])           # (B,c,c)
-    s_chk = jnp.where(chk_ok[:, None, None], s_chk, NEG_INF)
-
-    probs = jax.nn.softmax(jnp.concatenate([s_ctx, s_chk], axis=-1),
-                           axis=-1)
-    o = jnp.einsum("bkgst,btkd->bskgd", probs[..., :t],
-                   v_ctx.astype(jnp.float32)) \
-        + jnp.einsum("bkgst,btkd->bskgd", probs[..., t:],
-                     v_new.astype(jnp.float32))
-    o = o.reshape(b, c, a.heads_padded * a.head_dim).astype(x.dtype)
-    y = linear_apply(p["wo"], _mask_pad_heads(o, a))
+    if use_kernel and max_pages is not None \
+            and max_pages < rows.shape[1]:
+        rows = rows[:, :max_pages]
+    o = paged_prefix_extend_attention(q, kp, vp, rows, starts,
+                                      k_new, v_new, lengths, k_sc, v_sc,
+                                      use_kernel=use_kernel)
+    o = o.reshape(b, c, a.heads_padded * a.head_dim)
+    y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
     return y, cache
 
 
@@ -472,9 +463,13 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
     quantized token writes (``kvcache.paged_write_batch(mask=)``), so a
     rejected tail can never grow a page's running amax or requantize
     live entries: the paged pools evolve bit-identically to non-
-    speculative decode and rollback is a pure length truncation."""
+    speculative decode and rollback is a pure length truncation.
+
+    Attention itself is the shared prefix-extend dispatch
+    (``kernels/paged_attention``) at W = draft_k + 1 — the same entry
+    point ``attention_prefill_paged`` runs at W = chunk width."""
     from repro import kvcache
-    from repro.kernels.paged_attention.ops import paged_verify_attention
+    from repro.kernels.paged_attention.ops import paged_prefix_extend_attention
     if a.window is not None:
         raise NotImplementedError("paged verify: sliding window unsupported")
     lengths, widths = spos
@@ -496,10 +491,10 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
 
     stage = kvcache.prefill_write(stage, {"k": k_new, "v": v_new})
     kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
-    o = paged_verify_attention(q, kp, vp, bt, lengths,
-                               k_new.astype(jnp.bfloat16),
-                               v_new.astype(jnp.bfloat16), widths,
-                               k_sc, v_sc, use_kernel=use_kernel)
+    o = paged_prefix_extend_attention(q, kp, vp, bt, lengths,
+                                      k_new.astype(jnp.bfloat16),
+                                      v_new.astype(jnp.bfloat16), widths,
+                                      k_sc, v_sc, use_kernel=use_kernel)
     o = o.reshape(b, w, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
     return y, stage

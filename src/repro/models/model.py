@@ -166,18 +166,23 @@ class LM:
         return self._mask_pad_logits(logits[:, 0]), cache
 
     def prefill_paged(self, params, tokens, cache, slot_ids, starts,
-                      lengths):
+                      lengths, max_pages=None):
         """Chunked prefill continuation straight into the paged cache:
         ``tokens`` (B, c) right-padded chunks land at absolute positions
         ``starts[b] + [0, lengths[b])`` of slot ``slot_ids[b]``; each
-        chunk's queries attend to the slot's cached prefix plus the chunk
-        itself (models/attention.attention_prefill_paged).  Returns
+        chunk's queries attend to the slot's cached prefix (streamed page
+        by page through the fused prefix-extend kernel — the W = chunk
+        instantiation of the spec-verify kernel) plus the chunk itself
+        (models/attention.attention_prefill_paged).  Returns
         logits at each row's last chunk token and the updated cache —
-        the scheduler samples from them only on a prompt's final chunk."""
+        the scheduler samples from them only on a prompt's final chunk.
+        ``max_pages`` (static python int) bounds the kernel's page grid
+        to the batch's actual prefix span (see attention_prefill_paged).
+        """
+        pos = (slot_ids, starts, lengths) if max_pages is None \
+            else (slot_ids, starts, lengths, max_pages)
         x, cache, _ = self.backbone(params, tokens, mode="prefill",
-                                    cache=cache,
-                                    pos=(slot_ids, starts, lengths),
-                                    train=False)
+                                    cache=cache, pos=pos, train=False)
         idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1).astype(jnp.int32)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = last.astype(jnp.float32) @ self._head_w(params).astype(

@@ -181,15 +181,18 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                 # "stage" node (write-after-accept), pages untouched.
                 y, stage = attn_mod.attention_verify_paged(
                     blk["attn"], h, a, c["kv"], c["stage"], pos,
-                    style=cfg.kv_cache_style)
+                    style=cfg.kv_cache_style,
+                    use_kernel=cfg.chunk_prefill_impl != "eager")
                 nc["stage"] = stage
             elif mode == "prefill":
                 if "k_pages" in c["kv"]:
                     # chunked/continuation prefill straight into the paged
-                    # pools; pos carries (slot_ids, starts, lengths)
+                    # pools; pos carries (slot_ids, starts, lengths).
+                    # Same prefix-extend dispatch as mode="verify".
                     y, kv = attn_mod.attention_prefill_paged(
                         blk["attn"], h, a, c["kv"], pos,
-                        style=cfg.kv_cache_style)
+                        style=cfg.kv_cache_style,
+                        use_kernel=cfg.chunk_prefill_impl != "eager")
                 else:
                     y, kv = attn_mod.attention_prefill(
                         blk["attn"], h, a, c["kv"], style=cfg.kv_cache_style,

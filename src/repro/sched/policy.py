@@ -77,18 +77,22 @@ class SJF(Policy):
     name = "sjf"
 
     def __init__(self, cfg, tier: str = "v5e-1",
-                 aging: float = DEFAULT_SJF_AGING):
+                 aging: float = DEFAULT_SJF_AGING,
+                 prefill_chunk: Optional[int] = None):
         from repro.core.costmodel import TIERS
         self.cfg = cfg
         self.tier = TIERS[tier] if isinstance(tier, str) else tier
         self.aging = aging
+        # the engine's chunk size: remaining prefill is priced at the
+        # fused kernel's streamed-page bytes per chunk, not one shot
+        self.prefill_chunk = prefill_chunk
 
     def remaining_s(self, req) -> float:
         from repro.core.costmodel import service_estimate
         rem_gen = max(req.max_new_tokens - _gen_len(req), 0)
         est = service_estimate(self.cfg, self.tier,
                                prompt=max(_remaining_prefill(req), 1),
-                               gen=rem_gen)
+                               gen=rem_gen, chunk=self.prefill_chunk)
         return est["t_total_s"]
 
     def priority(self, req, now: float):
@@ -117,11 +121,13 @@ class EDF(Policy):
     name = "edf"
 
     def __init__(self, slo_ttft: Optional[float] = None, *, cfg=None,
-                 tier: str = "v5e-1"):
+                 tier: str = "v5e-1",
+                 prefill_chunk: Optional[int] = None):
         from repro.core.costmodel import TIERS
         self.slo_ttft = slo_ttft if slo_ttft is not None else DEFAULT_TTFT_S
         self.cfg = cfg
         self.tier = TIERS[tier] if isinstance(tier, str) else tier
+        self.prefill_chunk = prefill_chunk
 
     def deadline(self, req) -> float:
         slo = req.slo_ttft if req.slo_ttft is not None else self.slo_ttft
@@ -139,19 +145,20 @@ class EDF(Policy):
         from repro.core.costmodel import service_estimate
         est = service_estimate(self.cfg, self.tier,
                                prompt=max(_remaining_prefill(req), 1),
-                               gen=0)
+                               gen=0, chunk=self.prefill_chunk)
         return now + est["t_prefill_s"] > dl
 
 
 def make_policy(name: str, *, cfg=None, tier: str = "v5e-1",
-                slo_ttft: Optional[float] = None) -> Policy:
+                slo_ttft: Optional[float] = None,
+                prefill_chunk: Optional[int] = None) -> Policy:
     name = name.lower()
     if name == "fcfs":
         return FCFS()
     if name == "sjf":
         if cfg is None:
             raise ValueError("sjf needs the model config for cost estimates")
-        return SJF(cfg, tier)
+        return SJF(cfg, tier, prefill_chunk=prefill_chunk)
     if name == "edf":
-        return EDF(slo_ttft, cfg=cfg, tier=tier)
+        return EDF(slo_ttft, cfg=cfg, tier=tier, prefill_chunk=prefill_chunk)
     raise ValueError(f"unknown policy {name!r} (fcfs | sjf | edf)")

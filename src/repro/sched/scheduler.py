@@ -71,7 +71,12 @@ class SchedEngine(PagedEngine):
         super().__init__(lm, params, **kw)
         self.admission_control = admission_control
         if prefill_chunk is None:
-            prefill_chunk = 4 * self.page_size
+            # 8 pages (was 4): the fused prefix-extend kernel streams the
+            # cached prefix page by page instead of gathering the full
+            # padded horizon per chunk, so chunk size no longer bounds an
+            # eager context materialization — bigger chunks just amortize
+            # dispatch overhead over more prefill tokens
+            prefill_chunk = 8 * self.page_size
         if prefill_chunk % self.page_size or prefill_chunk <= 0:
             raise ValueError(
                 f"prefill_chunk={prefill_chunk} must be a positive multiple "
@@ -81,7 +86,8 @@ class SchedEngine(PagedEngine):
         self.policy: Policy = (policy if isinstance(policy, Policy)
                                else make_policy(policy, cfg=self.lm.cfg,
                                                 tier=tier,
-                                                slo_ttft=slo_ttft))
+                                                slo_ttft=slo_ttft,
+                                                prefill_chunk=prefill_chunk))
         self.prefix = (PrefixCache(self.alloc, self.page_size)
                        if prefix_cache else None)
         self.slo_ttft = slo_ttft
@@ -93,19 +99,24 @@ class SchedEngine(PagedEngine):
         # request, keyed on the token count (readmits grow it)
         self._chains: Dict[int, tuple] = {}
         donate = () if jax.default_backend() == "cpu" else (1,)
-        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate,
+                                  static_argnames=("max_pages",))
 
     # ------------------------------------------------------------------
     # device programs
 
     def _chunk_impl(self, params, cache, tokens, slot_ids, starts, clens,
-                    temps, key):
+                    temps, key, max_pages=None):
         """One continuation-chunk dispatch: prefill ``tokens`` (B, c)
         against the paged cache at absolute positions ``starts``; sample
         a candidate first token from each row's last-chunk logits (used
-        only by rows whose prompt completes this chunk)."""
+        only by rows whose prompt completes this chunk).  ``max_pages``
+        (static, pow2-bucketed) narrows the prefix-extend kernel's page
+        grid to the batch's deepest prefix instead of the full slot
+        horizon."""
         logits, cache = self.lm.prefill_paged(params, tokens, cache,
-                                              slot_ids, starts, clens)
+                                              slot_ids, starts, clens,
+                                              max_pages=max_pages)
         tok = _sample_batch(logits, temps, key)
         return tok, cache
 
@@ -312,19 +323,44 @@ class SchedEngine(PagedEngine):
             tokens = np.zeros((len(ready), cpad), np.int32)
             for i, (_, req, toks, clen) in enumerate(ready):
                 tokens[i, :clen] = toks[req.progress:req.progress + clen]
+            if cont:
+                # pow2-bucket the ROW count too (the chunk width cpad
+                # already is): ragged ready-row counts would otherwise
+                # retrace the continuation program.  Pad rows are inert —
+                # clen 0 routes their scatter to the null page, start 0
+                # skips every prefix page in the kernel, and the host
+                # loop below never reads their sampled token.
+                rpad = _pow2_bucket(len(ready), lo=1)
+                if rpad > len(ready):
+                    pad = rpad - len(ready)
+                    slots = np.concatenate(
+                        [slots, np.full(pad, slots[0], np.int32)])
+                    starts = np.concatenate(
+                        [starts, np.zeros(pad, np.int32)])
+                    clens = np.concatenate([clens, np.zeros(pad, np.int32)])
+                    tokens = np.concatenate(
+                        [tokens, np.zeros((pad, cpad), np.int32)])
             self.key, sub = jax.random.split(self.key)
             temps = jnp.asarray(self.temps[slots])
+            t0 = time.perf_counter()
             if cont:
+                # page grid sized by the batch's deepest prefix (pow2-
+                # bucketed static), not the slot horizon: the fused
+                # kernel's step count scales with actual context
+                mp = min(_pow2_bucket(-(-int(starts.max())
+                                        // self.page_size), lo=1),
+                         self.alloc.max_pages_per_slot)
                 tok, self.cache = self._chunk_jit(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(slots), jnp.asarray(starts),
-                    jnp.asarray(clens), temps, sub)
+                    jnp.asarray(clens), temps, sub, max_pages=mp)
             else:
                 tok, self.cache = self._admit_jit(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(slots), jnp.asarray(clens), temps, sub)
             tok = np.asarray(tok)            # <- sync (1 per chunk batch)
             self.sync_count += 1
+            self.t_prefill_s += time.perf_counter() - t0
             self.stats.chunks += 1
             now = time.perf_counter()
             for i, (slot, req, toks, clen) in enumerate(ready):

@@ -75,6 +75,11 @@ class _EngineBase:
         self.queue: deque[Request] = deque()
         self.registry: Dict[int, Request] = {}   # rid -> req (all ever seen)
         self._next_rid = 0
+        # phase wall-clock (device dispatch + its host sync), so the
+        # benchmark can report prefill-phase vs decode-phase tokens/sec
+        # separately instead of hiding prefill behind decode throughput
+        self.t_prefill_s = 0.0
+        self.t_decode_s = 0.0
 
     def submit(self, prompt, **kw) -> int:
         prompt = np.asarray(prompt, np.int32)
@@ -151,7 +156,9 @@ class Engine(_EngineBase):
             logits, self.cache = self._prefill_one(
                 self.params, self.cache, jnp.asarray(req.prompt),
                 jnp.int32(slot))
-            tok = self._sample(np.asarray(logits), req.temperature)
+            logits = np.asarray(logits)
+            self.t_prefill_s += time.perf_counter() - req.t_admit
+            tok = self._sample(logits, req.temperature)
             req.out_tokens.append(tok)
             req.pos = plen
             req.t_first = time.perf_counter()
@@ -178,10 +185,12 @@ class Engine(_EngineBase):
         # per-slot masking happens inside attention via each slot's cache
         # contents.  We decode each active slot at its own pos by running
         # the step with per-slot positions (vector pos).
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache,
             jnp.asarray(pos_by_slot))
         logits = np.asarray(logits)
+        self.t_decode_s += time.perf_counter() - t0
 
         for slot, req in list(self.active.items()):
             tok = self._sample(logits[slot], req.temperature)
@@ -392,12 +401,14 @@ class PagedEngine(_EngineBase):
         self.cache = set_block_table_rows(self.cache, slot_ids,
                                           self.alloc.table[slot_ids])
         self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
         tok0, self.cache = self._admit_jit(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(slot_ids), jnp.asarray(plens),
             jnp.asarray(self.temps[slot_ids]), sub)
         tok0 = np.asarray(tok0)                  # <- sync (1 per admit batch)
         self.sync_count += 1
+        self.t_prefill_s += time.perf_counter() - t0
         now = time.perf_counter()
         for i, req in enumerate(admitted):
             t = int(tok0[i])
@@ -418,6 +429,7 @@ class PagedEngine(_EngineBase):
         for slot in self.active:
             active_mask[slot] = True
         self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
         out = self._decode_jit(
             self.params, self.cache, jnp.asarray(self.last_tok),
             jnp.asarray(self.lengths), jnp.asarray(active_mask),
@@ -427,6 +439,7 @@ class PagedEngine(_EngineBase):
         toks, emits, last, lengths, active, remaining = (
             np.array(x) for x in out[1:])
         self.sync_count += 1
+        self.t_decode_s += time.perf_counter() - t0
         self.steps_dispatched += self.decode_block
         now = time.perf_counter()
         for i in range(self.decode_block):

@@ -247,7 +247,12 @@ class SpecEngine(SchedEngine):
             hist = np.concatenate([np.asarray(req.prompt, np.int32),
                                    np.asarray(req.out_tokens, np.int32)])
             batch.append((slot, req.rid, hist, k))
+        t0 = time.perf_counter()
         proposals = self.drafter.propose_batch(batch, self.k_max)
+        # drafting is decode-phase work (the draft-LM arm is a real
+        # dispatch + sync): charge it, or the benchmark's phase split
+        # would overstate spec decode throughput
+        self.t_decode_s += time.perf_counter() - t0
         fed = np.zeros((self.n_slots, self.w_max), np.int32)
         widths = np.zeros((self.n_slots,), np.int32)
         ndraft = np.zeros((self.n_slots,), np.int32)
@@ -276,6 +281,7 @@ class SpecEngine(SchedEngine):
                 np.sum(row_before != self.alloc.table[slot]))
         # --- verify + commit (one dispatch, one sync) -----------------
         self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
         out = self._verify_jit(
             self.params, self.cache, jnp.asarray(fed),
             jnp.asarray(self.lengths), jnp.asarray(widths),
@@ -285,6 +291,7 @@ class SpecEngine(SchedEngine):
         y, n_emit, n_match, last, lengths, active, remaining = (
             np.array(x) for x in out[1:])
         self.sync_count += 1
+        self.t_decode_s += time.perf_counter() - t0
         self.spec_stats.verify_steps += 1
         self.lengths, self.last_tok, self.remaining = (lengths, last,
                                                        remaining)

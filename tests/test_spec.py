@@ -32,11 +32,12 @@ def _quant_pool(rng, n, page, kh, d, dtype):
 @pytest.mark.parametrize("dtype", ["bf16", "int8"])
 @pytest.mark.parametrize("kh", [1, 2, 4])
 def test_verify_kernel_matches_ref(dtype, kh):
-    """Multi-query verify kernel == gather oracle across GQA widths,
-    partial pages, width-1 (plain decode) and width-0 (inactive) slots."""
+    """Multi-query prefix-extend kernel (verify instantiation) == gather
+    oracle across GQA widths, partial pages, width-1 (plain decode) and
+    width-0 (inactive) slots."""
     from repro.kernels.paged_attention.paged_attention import (
-        paged_verify_attention_pallas)
-    from repro.kernels.paged_attention.ref import paged_verify_attention_ref
+        paged_prefix_extend_pallas)
+    from repro.kernels.paged_attention.ref import paged_prefix_extend_ref
     rng = np.random.default_rng(0)
     s_n, w_n, h, d, page, p_n = 4, 4, 4, 16, 8, 4
     n_pages = 1 + s_n * p_n
@@ -49,10 +50,10 @@ def test_verify_kernel_matches_ref(dtype, kh):
     widths = jnp.asarray([4, 0, 1, 2], jnp.int32)
     ck = jnp.asarray(rng.normal(size=(s_n, w_n, kh, d)), jnp.bfloat16)
     cv = jnp.asarray(rng.normal(size=(s_n, w_n, kh, d)), jnp.bfloat16)
-    ref = paged_verify_attention_ref(q, kp, vp, bt, lengths, ck, cv,
-                                     widths, ks, vs)
-    ker = paged_verify_attention_pallas(q, kp, vp, bt, lengths, ck, cv,
-                                        widths, ks, vs, interpret=True)
+    ref = paged_prefix_extend_ref(q, kp, vp, bt, lengths, ck, cv,
+                                  widths, ks, vs)
+    ker = paged_prefix_extend_pallas(q, kp, vp, bt, lengths, ck, cv,
+                                     widths, ks, vs, interpret=True)
     np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
                                atol=2e-2, rtol=2e-2)
     # width-0 slot returns exact zeros on both paths
@@ -63,8 +64,8 @@ def test_verify_kernel_matches_ref(dtype, kh):
 def test_verify_width1_matches_decode_kernel():
     """A width-1 verify (no drafts) must score exactly what the plain
     decode kernel scores AFTER writing the token — same conditional."""
-    from repro.kernels.paged_attention.ops import (paged_attention,
-                                                   paged_verify_attention)
+    from repro.kernels.paged_attention.ops import (
+        paged_attention, paged_prefix_extend_attention)
     rng = np.random.default_rng(1)
     s_n, h, kh, d, page, p_n = 2, 4, 2, 16, 8, 3
     n_pages = 1 + s_n * p_n
@@ -75,8 +76,8 @@ def test_verify_width1_matches_decode_kernel():
     q = jnp.asarray(rng.normal(size=(s_n, 1, h, d)), jnp.float32)
     ck = jnp.asarray(rng.normal(size=(s_n, 1, kh, d)), jnp.bfloat16)
     cv = jnp.asarray(rng.normal(size=(s_n, 1, kh, d)), jnp.bfloat16)
-    ver = paged_verify_attention(q, kp, vp, bt, lengths, ck, cv,
-                                 jnp.ones((s_n,), jnp.int32))
+    ver = paged_prefix_extend_attention(q, kp, vp, bt, lengths, ck, cv,
+                                        jnp.ones((s_n,), jnp.int32))
     # decode path: write the token at lengths, attend with lengths+1
     kp2 = kp.at[bt[jnp.arange(s_n), lengths // page],
                 lengths % page].set(ck[:, 0])
