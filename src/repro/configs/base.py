@@ -179,6 +179,13 @@ class ModelConfig:
     kv_cache_style: str = "full"      # full | gqa | mqa (AE-LLM c_inf arm)
     quant: str = "bf16"               # bf16 | fp8 | int8 | int4  (weights)
     quant_method: str = "none"        # none | gptq | awq | smoothquant
+    # quantized-weight matmul execution for INFERENCE forwards: "fused"
+    # streams int8/fp8 weights through the decode-shaped Pallas kernels
+    # (dynamic activation quant + scale/bias epilogue fused; tiled kernel
+    # at prefill M); "ref" is the differentiable jnp oracle.  Training
+    # always takes "ref" (Pallas is not differentiable) — see
+    # quant.qops.quant_impl / LM.backbone.
+    quant_matmul_impl: str = "fused"  # fused | ref
     # speculative decoding (repro.spec; AE-LLM c_inf "spec" arm):
     # none | ngram (model-free prompt lookup) | draft (small draft LM)
     spec_decode: str = "none"

@@ -222,8 +222,34 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
     t_dec = _roofline_s(cfg, tier, _flops_per_token(cfg, ctx),
                         awbytes + ctx * kv_tok) \
         + _decode_collective_s(cfg, tier, 1)
+    # per-decode-step HBM split: weight-stream vs KV bytes.  Both terms
+    # are quant-aware (BYTES / the kvcache spec), so SJF/EDF ordering and
+    # the spec controller see exactly what int8/fp8 weight streaming buys
+    # in the memory-bound decode regime (int8 weights: 2x fewer
+    # weight-stream bytes than bf16 at identical ranking semantics).
     return {"t_prefill_s": t_pf, "t_decode_tok_s": t_dec,
-            "t_total_s": t_pf + gen * t_dec}
+            "t_total_s": t_pf + gen * t_dec,
+            "weight_bytes_decode": awbytes,
+            "kv_bytes_decode": ctx * kv_tok,
+            "hbm_bytes_decode": awbytes + ctx * kv_tok}
+
+
+def quant_decode_scale(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
+                       prompt: int = 512, gen: int = 128) -> float:
+    """Modeled decode-step time of ``cfg`` relative to the same config
+    with bf16 weights (< 1 when weight quantization pays, e.g. ~0.5 for
+    int8 in the weight-dominated regime).  The spec controller divides
+    HOST-side draft costs by this: an n-gram lookup's absolute cost does
+    not shrink when the target's verify step does, so its cost in
+    decode-step units grows and the modeled-speedup argmax must see
+    that."""
+    if cfg.quant in ("bf16", "none", "fp16"):
+        return 1.0
+    t_q = service_estimate(cfg, tier, prompt=prompt,
+                           gen=gen)["t_decode_tok_s"]
+    t_b = service_estimate(cfg.with_(quant="bf16"), tier, prompt=prompt,
+                           gen=gen)["t_decode_tok_s"]
+    return t_q / max(t_b, 1e-12)
 
 
 def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,

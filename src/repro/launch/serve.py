@@ -106,7 +106,18 @@ def main(argv=None):
                     help="KV-cache storage dtype (repro.kvcache): int8/fp8 "
                          "caches carry amax scales and halve KV HBM")
     ap.add_argument("--quant", default="bf16",
-                    choices=["bf16", "fp8", "int8", "int4"])
+                    choices=["bf16", "fp8", "int8", "int4"],
+                    help="weight quantization for the SERVING path "
+                         "(quant.qops.quantize_tree); every engine "
+                         "streams the quantized weights — decode, spec "
+                         "verify, chunked prefill, draft LM included")
+    ap.add_argument("--quant-impl", default="fused",
+                    choices=["fused", "ref"],
+                    help="quantized-matmul execution: 'fused' streams "
+                         "weights through the decode-shaped Pallas "
+                         "kernels (activation quant + scale/bias "
+                         "epilogue fused); 'ref' is the jnp oracle "
+                         "(debug / A-B only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -117,13 +128,20 @@ def main(argv=None):
                     if cfg.attention is not None else "full",
                     kv_cache_dtype=normalize_dtype(args.kv_dtype)
                     if cfg.attention is not None else "bfloat16",
-                    chunk_prefill_impl=args.chunk_prefill_impl)
+                    chunk_prefill_impl=args.chunk_prefill_impl,
+                    # cfg.quant makes the cost model price the quantized
+                    # weight stream (SJF/EDF ordering + spec controller);
+                    # quant_matmul_impl selects the fused Pallas kernels
+                    # for every inference forward
+                    quant=args.quant,
+                    quant_matmul_impl=args.quant_impl)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     if args.quant != "bf16":
         from repro.quant.qops import quantize_tree
         params = quantize_tree(params, quant=args.quant)
-        print(f"[serve] weights quantized to {args.quant}")
+        print(f"[serve] weights quantized to {args.quant} "
+              f"({args.quant_impl} matmuls)")
 
     if args.spec != "none" or args.policy:
         sched_kw = dict(n_slots=args.slots,
@@ -149,11 +167,20 @@ def main(argv=None):
                             if args.draft_config == "auto"
                             else get_smoke_config(args.draft_config)
                             if args.smoke else get_config(args.draft_config))
+                    # the drafter streams quantized weights too — its
+                    # forward passes run the same fused serving path
+                    dcfg = dcfg.with_(quant=args.quant,
+                                      quant_matmul_impl=args.quant_impl)
                     draft_lm = LM(dcfg)
                     draft_params = draft_lm.init(
                         jax.random.PRNGKey(args.seed + 1))
+                    if args.quant != "bf16":
+                        from repro.quant.qops import quantize_tree
+                        draft_params = quantize_tree(draft_params,
+                                                     quant=args.quant)
                     print(f"[serve] draft model {dcfg.name}: "
-                          f"{dcfg.num_layers}L d={dcfg.d_model}")
+                          f"{dcfg.num_layers}L d={dcfg.d_model} "
+                          f"quant={args.quant}")
             eng = SpecEngine(lm, params, spec=args.spec,
                              draft_k=args.draft_k, draft_lm=draft_lm,
                              draft_params=draft_params,

@@ -453,6 +453,12 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
     x: (S, W, d) — the fed chunk (last accepted token + draft tokens),
     right-padded; ``spos`` is ``(lengths (S,), widths (S,))``: slot s's
     chunk sits at logical positions ``lengths[s] + [0, widths[s])``.
+    An optional 3rd entry ``max_pages`` (static python int) narrows the
+    kernel's page grid to the first ``max_pages`` block-table columns —
+    the spec engine passes the pow2-bucketed page span of the deepest
+    slot, so verify grid steps scale with the ACTUAL context instead of
+    the full slot horizon (the chunk's own K/V is fresh, never paged, so
+    only the prefix ``< lengths[s]`` bounds the span).
     Query w attends the cached prefix (positions < lengths[s], read from
     the pages — quantized pools dequant fused in the kernel) plus the
     chunk's own fresh bf16 K/V causally (keys j <= w, j < widths[s]).
@@ -472,7 +478,8 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
     from repro.kernels.paged_attention.ops import paged_prefix_extend_attention
     if a.window is not None:
         raise NotImplementedError("paged verify: sliding window unsupported")
-    lengths, widths = spos
+    lengths, widths, *rest = spos
+    max_pages = rest[0] if rest else None
     b, w, _ = x.shape
     kvh = a.kv_heads_effective()
     kvh_store = cache["k_pages"].shape[2]
@@ -491,6 +498,8 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
 
     stage = kvcache.prefill_write(stage, {"k": k_new, "v": v_new})
     kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
+    if use_kernel and max_pages is not None and max_pages < bt.shape[1]:
+        bt = bt[:, :max_pages]
     o = paged_prefix_extend_attention(q, kp, vp, bt, lengths,
                                       k_new.astype(jnp.bfloat16),
                                       v_new.astype(jnp.bfloat16), widths,

@@ -37,14 +37,16 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def linear_apply(p: dict, x: jax.Array) -> jax.Array:
-    """Dense / quantized matmul.  Quantized params carry {'qw','scale'}."""
+    """Dense / quantized matmul.  Quantized params carry {'qw','scale'};
+    their bias is handed to ``quantized_matmul`` so the decode-shaped
+    kernels can fold it into the scale epilogue."""
     if "qw" in p:
         from repro.quant.qops import quantized_matmul
-        y = quantized_matmul(x, p)
+        y = quantized_matmul(x, p, bias=p.get("b"))
     else:
         y = x @ p["w"].astype(x.dtype)
-    if "b" in p:
-        y = y + p["b"].astype(y.dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
     if "lora" in p:
         from repro.peft.lora import lora_delta
         y = y + lora_delta(p["lora"], x)

@@ -89,15 +89,25 @@ class LM:
     def backbone(self, params, tokens, *, mode="train", cache=None, pos=None,
                  modality_input=None, train=True):
         cfg = self.cfg
-        x = embedding_apply(params["embed"], tokens).astype(self.dtype)
-        x = maybe_constrain(x, ("pod", "data"), None, None)
-        cross_src = None
-        if modality_input is not None and mode != "decode":
-            cross_src = self._encode_source(params, modality_input)
-        x, new_cache, aux = stack_forward(
-            params["layers"], x, cfg, mode=mode, cache=cache, pos=pos,
-            cross_src=cross_src, train=train)
-        x = norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+        # Quantized-matmul impl for every linear under this forward —
+        # the ONE choke point all serving paths (prefill, paged decode,
+        # spec verify, chunked-prefill continuation, the draft LM) pass
+        # through.  Entered at trace time, so the choice is static in
+        # each jitted program.  Training forwards stay on the jnp ref
+        # path: Pallas kernels are not differentiable (QLoRA backprops
+        # through quantized_matmul).
+        from repro.quant.qops import quant_impl
+        impl = "ref" if train else cfg.quant_matmul_impl
+        with quant_impl(impl):
+            x = embedding_apply(params["embed"], tokens).astype(self.dtype)
+            x = maybe_constrain(x, ("pod", "data"), None, None)
+            cross_src = None
+            if modality_input is not None and mode != "decode":
+                cross_src = self._encode_source(params, modality_input)
+            x, new_cache, aux = stack_forward(
+                params["layers"], x, cfg, mode=mode, cache=cache, pos=pos,
+                cross_src=cross_src, train=train)
+            x = norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
         return x, new_cache, aux
 
     # ------------------------------------------------------------------
@@ -189,7 +199,8 @@ class LM:
             jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), cache
 
-    def verify_paged(self, params, tokens, cache, stage, lengths, widths):
+    def verify_paged(self, params, tokens, cache, stage, lengths, widths,
+                     max_pages=None):
         """Speculative verify (``repro.spec``): score ``tokens`` (S, W) —
         the last accepted token followed by draft tokens, right-padded —
         in ONE dispatch.  Row s's chunk sits at logical positions
@@ -200,10 +211,15 @@ class LM:
         :meth:`init_cache`), NOT the paged pools — the engine commits
         only the accepted prefix afterwards (write-after-accept).
         Returns logits at ALL W positions ((S, W, V)) and the filled
-        stage cache; the paged ``cache`` is read-only here."""
+        stage cache; the paged ``cache`` is read-only here.
+        ``max_pages`` (static python int) narrows the prefix-extend
+        kernel's page grid to the batch's actual prefix span, same as
+        :meth:`prefill_paged` (see attention_verify_paged)."""
         combined = _zip_verify_cache(cache, stage)
+        pos = (lengths, widths) if max_pages is None \
+            else (lengths, widths, max_pages)
         x, out, _ = self.backbone(params, tokens, mode="verify",
-                                  cache=combined, pos=(lengths, widths),
+                                  cache=combined, pos=pos,
                                   train=False)
         logits = x.astype(jnp.float32) @ self._head_w(params).astype(
             jnp.float32)

@@ -8,9 +8,18 @@ dispatches here.
 int8 = W8A8 (dynamic per-row activation quant, Pallas kernel on TPU).
 int4 = W4A16 weight-only (GPTQ/AWQ deployment style, packed 2/int8).
 fp8  = e4m3 weights (+bf16 activations; MXU-native on v5e+).
+
+Execution impl is a module-level context (:func:`quant_impl`) set at
+TRACE time — ``LM.backbone`` enters it from ``cfg.quant_matmul_impl``
+for every inference-mode forward, so the choice is baked statically into
+each jitted serving program.  The default outside any context is "ref"
+(the differentiable jnp oracle): training (QLoRA differentiates through
+this function) and direct calls keep oracle semantics; the fused Pallas
+paths are opt-in per forward pass.
 """
 from __future__ import annotations
 
+import contextlib
 import re
 
 import jax
@@ -18,29 +27,78 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
-from repro.kernels.int8_matmul.ops import (int4_matmul, int8_matmul_dynamic)
+from repro.kernels.int8_matmul.ops import (fp8_matmul_decode, int4_matmul,
+                                           int8_matmul_dynamic,
+                                           w8a8_matmul_decode)
 from repro.kernels.int8_matmul.ref import (quantize_colwise,
                                            quantize_int4_colwise)
 
 FP8 = jnp.float8_e4m3fn
 
+# Pallas kernels are not differentiable, so "fused" is only ever entered
+# by inference forwards (LM.backbone, train=False); everything else sees
+# the "ref" default.
+_QUANT_IMPL = "ref"
 
-def quantized_matmul(x: jax.Array, p: dict) -> jax.Array:
+# Whole-batch M at or below this takes the skinny-M decode kernel (M
+# untiled, N/K grid); larger M (chunked prefill, batched admission) takes
+# the tiled kernel.  Static at trace time.
+_DECODE_M_MAX = 128
+
+
+@contextlib.contextmanager
+def quant_impl(impl: str):
+    """Select the quantized-matmul execution path ("fused" | "ref") for
+    calls traced inside the context."""
+    global _QUANT_IMPL
+    if impl not in ("fused", "ref"):
+        raise ValueError(f"unknown quant impl {impl!r}")
+    prev = _QUANT_IMPL
+    _QUANT_IMPL = impl
+    try:
+        yield
+    finally:
+        _QUANT_IMPL = prev
+
+
+def quantized_matmul(x: jax.Array, p: dict, *, bias=None) -> jax.Array:
     """Dispatch on qw dtype (static under tracing): int8 = W8A8,
-    uint8 = packed int4 (W4A16), fp8 = fp8 weights."""
+    uint8 = packed int4 (W4A16), fp8 = fp8 weights.  ``bias`` (if given)
+    is ALWAYS applied here — fused into the kernel epilogue on the
+    decode-shaped paths, added afterwards otherwise — so callers must
+    not add it again."""
     qw = p["qw"]
+    fused = _QUANT_IMPL == "fused"
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+
+    def _plus_bias(y):
+        return y if bias is None else y + bias.astype(y.dtype)
+
     if qw.dtype == jnp.int8:
-        return int8_matmul_dynamic(x, qw, p["scale"])
+        if fused and m <= _DECODE_M_MAX:
+            x2 = x.reshape(-1, x.shape[-1])
+            y = w8a8_matmul_decode(x2, qw, p["scale"], bias=bias,
+                                   out_dtype=x.dtype)
+            return y.reshape(*x.shape[:-1], qw.shape[1])
+        return _plus_bias(int8_matmul_dynamic(x, qw, p["scale"],
+                                              use_kernel=fused))
     if qw.dtype == jnp.uint8:
-        return int4_matmul(x, qw, p["scale"])
+        return _plus_bias(int4_matmul(x, qw, p["scale"]))
     if qw.dtype == FP8:
+        if fused and m <= _DECODE_M_MAX:
+            x2 = x.reshape(-1, x.shape[-1])
+            y = fp8_matmul_decode(x2, qw, p["scale"], bias=bias,
+                                  out_dtype=x.dtype)
+            return y.reshape(*x.shape[:-1], qw.shape[1])
         # scale is per output column, so it commutes with the contraction:
         # (x @ (qw·s)) == (x @ qw)·s — the full-size scale multiply is
         # folded into the (much smaller) output.  The fp32 upcast of qw
         # feeding the dot remains (XLA fuses it into the matmul read on
-        # TPU); a true fp8-MXU dot is a ROADMAP follow-up.
+        # TPU); a true fp8-MXU dot at large M is a ROADMAP follow-up.
         y = x.astype(jnp.float32) @ qw.astype(jnp.float32)
-        return (y * p["scale"]).astype(x.dtype)
+        return _plus_bias((y * p["scale"]).astype(x.dtype))
     raise ValueError(f"unrecognized quantized dtype {qw.dtype}")
 
 

@@ -20,7 +20,8 @@ class AdaptiveDraftController:
     """Per-slot EMA acceptance tracking + modeled-speedup k selection."""
 
     def __init__(self, n_slots: int, k_max: int, *, arm: str = "ngram",
-                 adaptive: bool = True, a0: float = 0.5, beta: float = 0.3):
+                 adaptive: bool = True, a0: float = 0.5, beta: float = 0.3,
+                 cfg=None):
         from repro.core.costmodel import SPEC_DRAFT_COST
         self.n_slots = n_slots
         self.k_max = k_max
@@ -28,6 +29,15 @@ class AdaptiveDraftController:
         self.a0 = a0                      # optimistic prior: explore first
         self.beta = beta
         self.draft_cost = SPEC_DRAFT_COST.get(arm, 0.05)
+        # Draft costs are fractions of a TARGET decode step.  When the
+        # target streams quantized weights, its step shrinks, but a
+        # host-side n-gram lookup's absolute cost does not — rescale so
+        # the k argmax still trades real quantities.  The draft-LM arm is
+        # quantized alongside the target (launch/serve.py), so its
+        # relative cost is unchanged.
+        if cfg is not None and arm == "ngram":
+            from repro.core.costmodel import quant_decode_scale
+            self.draft_cost /= max(quant_decode_scale(cfg), 1e-3)
         self.ema = np.full((n_slots,), a0, np.float64)
         self.rounds = np.zeros((n_slots,), np.int64)
 

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.sched.policy import EDF
 from repro.sched.scheduler import SchedEngine
+from repro.serve.engine import _pow2_bucket
 from repro.serve.paged import commit_spec_cache
 from repro.spec.controller import AdaptiveDraftController
 from repro.spec.drafter import DraftLMDrafter, NgramDrafter
@@ -165,25 +166,32 @@ class SpecEngine(SchedEngine):
         else:
             self.drafter = None
         self.controller = AdaptiveDraftController(
-            self.n_slots, k_max=self.k_max, arm=spec, adaptive=adaptive)
+            self.n_slots, k_max=self.k_max, arm=spec, adaptive=adaptive,
+            cfg=lm.cfg)
         self.spec_slack_s = spec_slack_s
         self.spec_stats = SpecStats()
         donate = () if jax.default_backend() == "cpu" else (1,)
-        self._verify_jit = jax.jit(self._verify_impl, donate_argnums=donate)
+        self._verify_jit = jax.jit(self._verify_impl, donate_argnums=donate,
+                                   static_argnames=("max_pages",))
 
     # ------------------------------------------------------------------
     # device program
 
     def _verify_impl(self, params, cache, fed, lengths, widths, active,
-                     remaining, temps, key):
+                     remaining, temps, key, max_pages=None):
         """One verify round: multi-query scoring of every slot's chunk,
         exact accept/reject, then commit of ONLY the accepted prefix —
         the paged pools (incl. quantized page scales) evolve exactly as
-        ``n_emit`` baseline decode steps would have written them."""
+        ``n_emit`` baseline decode steps would have written them.
+        ``max_pages`` (static, pow2-bucketed) narrows the prefix-extend
+        kernel's page grid to the batch's deepest prefix instead of the
+        full slot horizon — the same narrowing the scheduler's chunked
+        prefill continuation got in PR 5."""
         s_n, w = fed.shape
         stage = self.lm.init_cache(s_n, w, kv_dtype="bfloat16")
         logits, stage = self.lm.verify_paged(params, fed, cache, stage,
-                                             lengths, widths)
+                                             lengths, widths,
+                                             max_pages=max_pages)
         y, n_emit, n_match = spec_accept(logits, fed, widths, active,
                                          temps, remaining, lengths,
                                          self.eos, self.max_len, key)
@@ -282,11 +290,18 @@ class SpecEngine(SchedEngine):
         # --- verify + commit (one dispatch, one sync) -----------------
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
+        # page grid sized by the deepest prefix across slots (pow2-
+        # bucketed static), not the slot horizon — the chunk K/V is
+        # fresh (staged, never paged), so only positions < lengths[s]
+        # are ever read from the pools
+        mp = min(_pow2_bucket(-(-int(self.lengths.max())
+                               // self.page_size), lo=1),
+                 self.alloc.max_pages_per_slot)
         out = self._verify_jit(
             self.params, self.cache, jnp.asarray(fed),
             jnp.asarray(self.lengths), jnp.asarray(widths),
             jnp.asarray(active_mask), jnp.asarray(self.remaining),
-            jnp.asarray(self.temps), sub)
+            jnp.asarray(self.temps), sub, max_pages=mp)
         self.cache = out[0]
         y, n_emit, n_match, last, lengths, active, remaining = (
             np.array(x) for x in out[1:])

@@ -7,7 +7,11 @@ import pytest
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.int8_matmul.ops import int4_matmul, int8_matmul
+from repro.kernels.int8_matmul.int8_matmul import (fp8_decode_matmul_pallas,
+                                                   w8a8_decode_matmul_pallas)
+from repro.kernels.int8_matmul.ops import (fp8_matmul_decode, int4_matmul,
+                                           int8_matmul, int8_matmul_dynamic,
+                                           w8a8_matmul_decode)
 from repro.kernels.int8_matmul.ref import (int4_matmul_ref, int8_matmul_ref,
                                            pack_int4, quantize_colwise,
                                            quantize_int4_colwise,
@@ -132,6 +136,121 @@ def test_int4_matmul():
     # per-element dequant err ~0.1 accumulates ~sqrt(K)·E|x| over K=128
     dense = x @ w
     err = np.abs(np.asarray(o, np.float32) - np.asarray(dense)).mean()
+    assert err < 2.0
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped W8A8 / fp8 matmul (skinny ragged M — the serving shapes)
+
+
+def _decode_operands(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+    w = rng.standard_normal((k, n))
+    ws = np.abs(w).max(axis=0) / 127.0
+    wq = jnp.asarray(np.clip(np.round(w / ws), -127, 127), jnp.int8)
+    bias = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    return x, wq, jnp.asarray(ws, jnp.float32), bias
+
+
+# M = live decode slots (1 = single request, 3 = ragged batch, 8 = full);
+# K/N sweep model-ish, ragged, and GQA-projection (K > N) dims
+DECODE_SHAPES = [(1, 64, 64), (3, 160, 96), (8, 512, 768), (4, 64, 32),
+                 (8, 768, 128)]
+
+
+@pytest.mark.parametrize("m,k,n", DECODE_SHAPES)
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_w8a8_decode_matmul_matches_ref(m, k, n, with_bias):
+    """Fused decode kernel == the jnp oracle BIT-identically: the
+    in-kernel per-tile activation quant is elementwise identical to
+    quantize_rowwise, the int32 accumulate is exact, and the epilogue
+    is the same f32 expression."""
+    x, wq, ws, bias = _decode_operands(m, k, n)
+    b = bias if with_bias else None
+    o = w8a8_matmul_decode(x, wq, ws, bias=b)
+    ref = int8_matmul_dynamic(x, wq, ws)
+    if b is not None:
+        ref = (ref.astype(jnp.float32) + b[None, :]).astype(ref.dtype)
+    if b is None:
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(ref))
+    else:
+        # the ref adds bias AFTER the bf16 cast (epilogue adds before):
+        # one rounding step apart, not bit-comparable
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("m,k,n", DECODE_SHAPES)
+def test_fp8_decode_matmul_matches_ref(m, k, n):
+    x, wq8, ws, bias = _decode_operands(m, k, n)
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((k, n))
+    ws = jnp.asarray(np.abs(w).max(axis=0) / 448.0, jnp.float32)
+    wq8 = jnp.asarray(w / np.asarray(ws), jnp.float8_e4m3fn)
+    o = fp8_matmul_decode(x, wq8, ws, bias=bias)
+    ref = ((x.astype(jnp.float32) @ wq8.astype(jnp.float32))
+           * ws[None, :] + bias[None, :]).astype(x.dtype)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(3, 160, 96), (8, 512, 768)])
+def test_decode_kernels_emulation_matches_pallas(m, k, n):
+    """The off-TPU tile emulation (interpret=True) is pinned bit-exactly
+    against the real kernel program run under the pl.pallas_call
+    interpreter (interpret="pallas") — the emulation may never drift
+    from what the TPU kernel computes."""
+    x, wq, ws, bias = _decode_operands(m, k, n)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    xs = jnp.maximum(amax, 1e-8) / 127.0
+    # small blocks when they divide the shape — exercises a multi-tile
+    # grid (several K partial tiles, N concat) instead of one big tile
+    bkw = dict(block_n=96, block_k=80) if (n % 96 == 0 and k % 80 == 0) \
+        else {}
+    emu = w8a8_decode_matmul_pallas(x, wq, xs, ws, bias, interpret=True,
+                                    **bkw)
+    pal = w8a8_decode_matmul_pallas(x, wq, xs, ws, bias,
+                                    interpret="pallas", **bkw)
+    np.testing.assert_array_equal(np.asarray(emu), np.asarray(pal))
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((k, n))
+    ws8 = jnp.asarray(np.abs(w).max(axis=0) / 448.0, jnp.float32)
+    wq8 = jnp.asarray(w / np.asarray(ws8), jnp.float8_e4m3fn)
+    emu8 = fp8_decode_matmul_pallas(x, wq8, ws8, bias, interpret=True)
+    pal8 = fp8_decode_matmul_pallas(x, wq8, ws8, bias, interpret="pallas")
+    np.testing.assert_array_equal(np.asarray(emu8), np.asarray(pal8))
+
+
+@pytest.mark.parametrize("m,k,n", [(130, 520, 320), (65, 192, 96),
+                                   (257, 513, 129)])
+def test_int8_matmul_kernel_ragged_pad(m, k, n):
+    """Non-multiple shapes go through pad-to-tile dispatch (the old
+    fallback degraded the block to the whole dimension — a VMEM blowup
+    at large ragged M) and still match the oracle exactly."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    xq, xs = quantize_rowwise(x)
+    wq, ws = quantize_colwise(w)
+    o = int8_matmul(xq, wq, xs, ws, use_kernel=True)
+    ref = int8_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(ref))
+
+
+def test_int4_matmul_decode_shapes():
+    """W4A16 at skinny decode M: ref-path only, but the serving dispatch
+    hits it — keep the drift bound pinned at these shapes too."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(k1, (3, 128), jnp.bfloat16)
+    w = jax.random.normal(k2, (128, 96))
+    packed, scale = quantize_int4_colwise(w)
+    o = int4_matmul(x, packed, scale)
+    assert o.shape == (3, 96) and o.dtype == x.dtype
+    dense = np.asarray(x, np.float32) @ np.asarray(w)
+    err = np.abs(np.asarray(o, np.float32) - dense).mean()
     assert err < 2.0
 
 
