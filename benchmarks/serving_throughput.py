@@ -295,6 +295,16 @@ def main(argv=None):
                     help="TTFT SLO target, ms (tier-relative)")
     ap.add_argument("--slo-tpot", type=float, default=500.0,
                     help="TPOT SLO target, ms (tier-relative)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="A/B the mesh-sharded serving path: greedy token "
+                         "identity (sharded vs single-device, paged/sched/"
+                         "spec engines) plus compiled-HLO collective bytes "
+                         "per decode step, kv-head-sharded vs the naive "
+                         "output-all-gather TP baseline.  Needs >= "
+                         "--model-parallel devices (on CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help="'model' axis size for --sharded")
     ap.add_argument("--out", type=pathlib.Path, default=OUT_DEFAULT)
     args = ap.parse_args(argv)
 
@@ -721,6 +731,98 @@ def main(argv=None):
               f"agree vs bf16: {wd['agreement_vs_bf16']} "
               f"(fp8 {wd['fp8_agreement_vs_bf16']}), weight stream "
               f"{wratio}x smaller ({full.name} cost model)")
+
+    # ---- sharded serving: kv-head-sharded TP over a host mesh -----------
+    # (tracked claims: greedy token identity sharded==single-device across
+    # all three engines, and the compiled decode step's all-gather bytes —
+    # the kv_shard arm must move >= 4x fewer than the naive output-all-
+    # gather TP baseline, because the pools stay shard-local.)
+    if args.sharded:
+        mp_n = args.model_parallel
+        if len(jax.devices()) < mp_n:
+            results["sharded_serving"] = {
+                "skipped": f"needs {mp_n} devices, have "
+                           f"{len(jax.devices())} — set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=N "
+                           "before jax initializes"}
+            print(f"[bench] sharded: {results['sharded_serving']['skipped']}")
+        else:
+            import jax.numpy as jnp
+
+            from repro.launch.mesh import make_host_mesh
+            from repro.launch.roofline import parse_collectives
+            from repro.sched import SchedEngine
+            from repro.spec import SpecEngine
+            mesh = make_host_mesh(model=mp_n)
+
+            def builders(mesh_arg):
+                kw = dict(n_slots=args.slots, max_len=args.max_len,
+                          seed=args.seed, page_size=args.page_size,
+                          decode_block=args.decode_block, mesh=mesh_arg)
+                return {
+                    "paged": lambda: PagedEngine(lm_paged, params, **kw),
+                    "sched": lambda: SchedEngine(lm_paged, params,
+                                                 policy="fcfs", **kw),
+                    "spec": lambda: SpecEngine(lm_paged, params,
+                                               spec="ngram",
+                                               draft_k=args.draft_k, **kw),
+                }
+
+            section = {"model_parallel": mp_n,
+                       "mesh": {k: int(v) for k, v in mesh.shape.items()},
+                       "devices": len(jax.devices()),
+                       "engines": {}}
+            single, sharded = builders(None), builders(mesh)
+            for name in ("paged", "sched", "spec"):
+                _, base_outs = run_engine(single[name](), prompts,
+                                          args.max_new, args.temperature,
+                                          arrivals=arrivals)
+                row, outs = run_engine(sharded[name](), prompts,
+                                       args.max_new, args.temperature,
+                                       arrivals=arrivals)
+                section["engines"][name] = {
+                    "token_identical": outs == base_outs,
+                    "tokens_per_sec_sharded": row["tokens_per_sec"],
+                }
+
+            # compiled-HLO collective accounting: lower the fused decode
+            # dispatch for both attention arms and count the bytes each
+            # scan step moves through the interconnect
+            def decode_collectives(tp_impl):
+                lm_tp = LM(lm_paged.cfg.with_(tp_attn_impl=tp_impl))
+                eng = PagedEngine(lm_tp, params, n_slots=args.slots,
+                                  max_len=args.max_len, seed=args.seed,
+                                  page_size=args.page_size,
+                                  decode_block=args.decode_block,
+                                  mesh=mesh)
+                s = eng.n_slots
+                a2 = (eng.params, eng.cache, jnp.zeros((s,), jnp.int32),
+                      jnp.zeros((s,), jnp.int32), jnp.ones((s,), bool),
+                      jnp.full((s,), args.max_new, jnp.int32),
+                      jnp.zeros((s,), jnp.float32), jax.random.PRNGKey(0))
+                with eng._mesh_ctx():
+                    hlo = eng._decode_jit.lower(*a2).compile().as_text()
+                return parse_collectives(hlo).to_dict(
+                    steps=args.decode_block)
+
+            coll = {impl: decode_collectives(impl)
+                    for impl in ("kv_shard", "gather")}
+            ag_kv = coll["kv_shard"]["bytes_per_step_by_op"].get(
+                "all-gather", 0.0)
+            ag_naive = coll["gather"]["bytes_per_step_by_op"].get(
+                "all-gather", 0.0)
+            section["decode_collectives_per_step"] = coll
+            section["all_gather_bytes_per_step"] = {
+                "kv_shard": ag_kv, "gather_baseline": ag_naive,
+                "reduction_x": round(ag_naive / max(ag_kv, 1.0), 2),
+            }
+            results["sharded_serving"] = section
+            idents = {n: e["token_identical"]
+                      for n, e in section["engines"].items()}
+            red = section["all_gather_bytes_per_step"]["reduction_x"]
+            print(f"[bench] sharded (model={mp_n}): token-identical "
+                  f"{idents}, all-gather B/step {ag_naive:.0f} -> "
+                  f"{ag_kv:.0f} ({red}x fewer vs naive TP)")
 
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(results, indent=1))

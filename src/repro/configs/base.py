@@ -190,6 +190,18 @@ class ModelConfig:
     # none | ngram (model-free prompt lookup) | draft (small draft LM)
     spec_decode: str = "none"
     spec_draft_k: int = 4             # max draft tokens per verify round
+    # serving mesh: size of the "model" axis the engines serve over.
+    # launch/serve's --model-parallel threads this into every engine;
+    # the engines build a host mesh, place params via sharding/rules,
+    # shard the paged KV pools by kv head, and run every dispatch under
+    # the mesh.  1 = single device (exactly the old path).
+    model_parallel: int = 1
+    # paged attention under a model-parallel mesh: "kv_shard" runs each
+    # shard's local kv heads inside shard_map (pools stay sharded — no
+    # full-horizon KV all-gather ever); "gather" is the naive
+    # output-all-gather TP baseline that replicates the pools into every
+    # shard per step (collective-byte A/B accounting only)
+    tp_attn_impl: str = "kv_shard"    # kv_shard | gather
 
     # ------------------------------------------------------------------
     def with_(self, **kw) -> "ModelConfig":

@@ -180,13 +180,23 @@ def _roofline_s(cfg: ModelConfig, tier: HwTier, flops: float,
                hbm_bytes / (tier.chips * HW["hbm_bw"]))
 
 
-def _decode_collective_s(cfg: ModelConfig, tier: HwTier,
-                         batch: int) -> float:
-    """TP all-reduce per decode step (2 per block, d_model activations);
-    zero on single-chip tiers."""
+def _decode_collective_bytes(cfg: ModelConfig, tier: HwTier,
+                             batch: int) -> float:
+    """ICI bytes per decode step under kv-head-sharded TP: 2 psum'd
+    activations per block (attention wo + MLP down contractions), d_model
+    wide, bf16 payload, ring all-reduce ≈ 2× the payload.  No KV term:
+    the paged pools are sharded by kv head, so decode attention moves no
+    KV over the interconnect — that absence IS the win the ``--sharded``
+    benchmark measures against the gather baseline."""
     if tier.chips <= 1:
         return 0.0
-    coll = 2 * cfg.num_layers * batch * cfg.d_model * 2.0 * 2.0
+    return 2 * cfg.num_layers * batch * cfg.d_model * 2.0 * 2.0
+
+
+def _decode_collective_s(cfg: ModelConfig, tier: HwTier,
+                         batch: int) -> float:
+    """TP all-reduce per decode step; zero on single-chip tiers."""
+    coll = _decode_collective_bytes(cfg, tier, batch)
     return coll / (tier.chips * HW["ici_bw_per_link"] * HW["ici_links"])
 
 
@@ -219,9 +229,9 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
                        prompt * _flops_per_token(cfg, max(prompt // 2, 1)),
                        by_pf)
     ctx = prompt + max(gen, 1) // 2
+    t_coll = _decode_collective_s(cfg, tier, 1)
     t_dec = _roofline_s(cfg, tier, _flops_per_token(cfg, ctx),
-                        awbytes + ctx * kv_tok) \
-        + _decode_collective_s(cfg, tier, 1)
+                        awbytes + ctx * kv_tok) + t_coll
     # per-decode-step HBM split: weight-stream vs KV bytes.  Both terms
     # are quant-aware (BYTES / the kvcache spec), so SJF/EDF ordering and
     # the spec controller see exactly what int8/fp8 weight streaming buys
@@ -231,7 +241,12 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
             "t_total_s": t_pf + gen * t_dec,
             "weight_bytes_decode": awbytes,
             "kv_bytes_decode": ctx * kv_tok,
-            "hbm_bytes_decode": awbytes + ctx * kv_tok}
+            "hbm_bytes_decode": awbytes + ctx * kv_tok,
+            # ICI collective traffic per decode step (0 on 1-chip tiers):
+            # the mesh-serving knob's modeled cost, next to its HBM peers
+            "ici_collective_bytes_decode":
+                _decode_collective_bytes(cfg, tier, 1),
+            "t_collective_decode_s": t_coll}
 
 
 def quant_decode_scale(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,

@@ -1,5 +1,5 @@
 """Public ops: paged decode + prefix-extend attention, kernel/oracle
-dispatch.
+dispatch, and the mesh-sharded (tensor-parallel) wrappers.
 
 bf16/fp32 pools run the plain kernels; int8/fp8 pools (with their
 per-page-per-kv-head scales from ``repro.kvcache``) run the fused-dequant
@@ -11,6 +11,22 @@ speculative verify (W = draft_k + 1, prefix = committed lengths) and
 chunked prefill continuation (W = chunk width, prefix = the chunk's
 page-aligned start) both dispatch through it, so the two instantiations
 can never drift.
+
+Sharded serving (``mesh=`` + ``tp_impl``): both entry points accept a
+mesh with a ``"model"`` axis.  Under ``tp_impl="kv_shard"`` the KV pools
+and scale tensors are sharded BY KV HEAD over that axis and the q/output
+head dim is split to match (q heads are kv-head-major, so contiguous
+head chunks align with kv-head chunks whenever both divide); each shard
+then runs the identical kernel on its local head slice inside
+``shard_map`` — block tables / lengths / widths replicated, and NO
+full-horizon KV ever crosses the interconnect (the per-head partial
+outputs combine downstream via the wo row-shard's psum).
+``tp_impl="gather"`` is the naive output-all-gather TP baseline: the
+same shard_map with every spec replicated, which forces jit to
+all-gather the full pools into each shard every step — kept only so the
+collective-byte win is measurable (benchmarks/serving_throughput.py
+``--sharded``).  Head counts the axis does not divide degrade to the
+gather path.
 """
 from __future__ import annotations
 
@@ -26,19 +42,24 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def paged_prefix_extend_attention(q, k_pages, v_pages, block_table,
-                                  prefix_lens, chunk_k, chunk_v, widths,
-                                  k_scales: Optional[jax.Array] = None,
-                                  v_scales: Optional[jax.Array] = None, *,
-                                  use_kernel: bool = True) -> jax.Array:
-    """Multi-query prefix-extend attention: q (S,W,H,D) queries at
-    logical positions ``prefix_lens[s] + [0, W)`` against the paged
-    prefix plus the chunk's own fresh K/V (``chunk_k``/``chunk_v``
-    (S,W,KH,D), causal up to ``widths[s]``) -> (S,W,H,D).  One dispatch
-    scores all W positions — the multi-query extension of
-    :func:`paged_attention`; ``use_kernel=False`` (or the eager
-    ``chunk_prefill_impl``) falls back to the full-horizon gather
-    oracle."""
+def _model_size(mesh, axis: str) -> int:
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def _shard_axis(tp_impl: str, m: int, heads: int, kv_heads: int,
+                axis: str) -> Optional[str]:
+    """The mesh axis to split the head dims over, or None (replicate —
+    the naive gather baseline / non-dividing fallback)."""
+    if tp_impl == "kv_shard" and heads % m == 0 and kv_heads % m == 0:
+        return axis
+    return None
+
+
+def _prefix_extend_local(q, k_pages, v_pages, block_table, prefix_lens,
+                         chunk_k, chunk_v, widths, k_scales, v_scales,
+                         use_kernel):
     if use_kernel:
         from repro.kernels.paged_attention.paged_attention import (
             paged_prefix_extend_pallas)
@@ -50,13 +71,57 @@ def paged_prefix_extend_attention(q, k_pages, v_pages, block_table,
                                    k_scales, v_scales)
 
 
-def paged_attention(q, k_pages, v_pages, block_table, lengths,
-                    k_scales: Optional[jax.Array] = None,
-                    v_scales: Optional[jax.Array] = None, *,
-                    use_kernel: bool = True) -> jax.Array:
-    """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P);
-    lengths: (S,); k_scales/v_scales: (N,KH) fp32 for quantized pools
-    -> (S,H,D)."""
+def paged_prefix_extend_attention(q, k_pages, v_pages, block_table,
+                                  prefix_lens, chunk_k, chunk_v, widths,
+                                  k_scales: Optional[jax.Array] = None,
+                                  v_scales: Optional[jax.Array] = None, *,
+                                  use_kernel: bool = True,
+                                  mesh=None, axis: str = "model",
+                                  tp_impl: str = "kv_shard") -> jax.Array:
+    """Multi-query prefix-extend attention: q (S,W,H,D) queries at
+    logical positions ``prefix_lens[s] + [0, W)`` against the paged
+    prefix plus the chunk's own fresh K/V (``chunk_k``/``chunk_v``
+    (S,W,KH,D), causal up to ``widths[s]``) -> (S,W,H,D).  One dispatch
+    scores all W positions — the multi-query extension of
+    :func:`paged_attention`; ``use_kernel=False`` (or the eager
+    ``chunk_prefill_impl``) falls back to the full-horizon gather
+    oracle.  ``mesh``/``tp_impl``: see the module docstring."""
+    m = _model_size(mesh, axis)
+    if m <= 1:
+        return _prefix_extend_local(q, k_pages, v_pages, block_table,
+                                    prefix_lens, chunk_k, chunk_v, widths,
+                                    k_scales, v_scales, use_kernel)
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    hs = _shard_axis(tp_impl, m, q.shape[2], k_pages.shape[2], axis)
+    args = [q, k_pages, v_pages, block_table, prefix_lens,
+            chunk_k, chunk_v, widths]
+    specs = [P(None, None, hs, None),          # q        (S,W,H,D)
+             P(None, None, hs, None),          # k_pages  (N,page,KH,D)
+             P(None, None, hs, None),          # v_pages
+             P(None, None),                    # block_table (replicated)
+             P(None),                          # prefix_lens (replicated)
+             P(None, None, hs, None),          # chunk_k  (S,W,KH,D)
+             P(None, None, hs, None),          # chunk_v
+             P(None)]                          # widths (replicated)
+    if k_scales is not None:
+        args += [k_scales, v_scales]
+        specs += [P(None, hs), P(None, hs)]    # (N,KH)
+
+    def local(*xs):
+        ks = vs = None
+        if len(xs) > 8:
+            ks, vs = xs[8], xs[9]
+        return _prefix_extend_local(xs[0], xs[1], xs[2], xs[3], xs[4],
+                                    xs[5], xs[6], xs[7], ks, vs, use_kernel)
+
+    fn = shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                   out_specs=P(None, None, hs, None), check_rep=False)
+    return fn(*args)
+
+
+def _paged_attention_local(q, k_pages, v_pages, block_table, lengths,
+                           k_scales, v_scales, use_kernel):
     if use_kernel:
         from repro.kernels.paged_attention.paged_attention import (
             paged_attention_pallas)
@@ -65,3 +130,42 @@ def paged_attention(q, k_pages, v_pages, block_table, lengths,
                                       interpret=not _on_tpu())
     return paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
                                k_scales, v_scales)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths,
+                    k_scales: Optional[jax.Array] = None,
+                    v_scales: Optional[jax.Array] = None, *,
+                    use_kernel: bool = True,
+                    mesh=None, axis: str = "model",
+                    tp_impl: str = "kv_shard") -> jax.Array:
+    """q: (S,H,D); k_pages/v_pages: (N,page,KH,D); block_table: (S,P);
+    lengths: (S,); k_scales/v_scales: (N,KH) fp32 for quantized pools
+    -> (S,H,D).  ``mesh``/``tp_impl``: see the module docstring."""
+    m = _model_size(mesh, axis)
+    if m <= 1:
+        return _paged_attention_local(q, k_pages, v_pages, block_table,
+                                      lengths, k_scales, v_scales,
+                                      use_kernel)
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    hs = _shard_axis(tp_impl, m, q.shape[1], k_pages.shape[2], axis)
+    args = [q, k_pages, v_pages, block_table, lengths]
+    specs = [P(None, hs, None),                # q       (S,H,D)
+             P(None, None, hs, None),          # k_pages (N,page,KH,D)
+             P(None, None, hs, None),          # v_pages
+             P(None, None),                    # block_table (replicated)
+             P(None)]                          # lengths (replicated)
+    if k_scales is not None:
+        args += [k_scales, v_scales]
+        specs += [P(None, hs), P(None, hs)]    # (N,KH)
+
+    def local(*xs):
+        ks = vs = None
+        if len(xs) > 5:
+            ks, vs = xs[5], xs[6]
+        return _paged_attention_local(xs[0], xs[1], xs[2], xs[3], xs[4],
+                                      ks, vs, use_kernel)
+
+    fn = shard_map(local, mesh=mesh, in_specs=tuple(specs),
+                   out_specs=P(None, hs, None), check_rep=False)
+    return fn(*args)

@@ -5,7 +5,8 @@ quantized writes / views for both contiguous and paged layouts.  The
 fused-dequant decode kernels live in ``kernels/paged_attention`` and
 consume the views exposed here.
 """
-from repro.kvcache.cache import (alloc_contiguous, alloc_paged, decode_write,
+from repro.kvcache.cache import (alloc_contiguous, alloc_paged,
+                                 constrain_paged_pools, decode_write,
                                  kv_views, paged_scatter_prefill,
                                  paged_views, paged_write_batch, pool_bytes,
                                  prefill_write)
@@ -20,6 +21,6 @@ __all__ = [
     "paged_pool_shape", "ELEM_BYTES", "FP8", "QMAX",
     "alloc_contiguous", "alloc_paged", "prefill_write", "decode_write",
     "kv_views", "paged_views", "paged_write_batch", "paged_scatter_prefill",
-    "pool_bytes",
+    "constrain_paged_pools", "pool_bytes",
     "quantize", "quantize_with_scale", "dequantize", "requantize",
 ]

@@ -133,6 +133,29 @@ def kv_views(cache: dict):
 # Paged writes
 
 
+def constrain_paged_pools(cache: dict) -> dict:
+    """Pin paged pools to their serving sharding: pages (…,page,KH,D)
+    kv-head-sharded over "model", scale tensors (…,KH) likewise, block
+    table replicated.  Called after every paged write so the pools carried
+    through the decode scan / chunk loop never drift to replicated (a
+    single resharding all-gather would dwarf the attention collectives).
+    Degrades to a no-op off-mesh or when KH doesn't divide
+    (``maybe_constrain``)."""
+    from repro.sharding.ctx import maybe_constrain
+    out = dict(cache)
+    for name in ("k_pages", "v_pages"):
+        if name in out:
+            x = out[name]
+            axes = (None,) * (x.ndim - 2) + ("model", None)
+            out[name] = maybe_constrain(x, *axes)
+    for name in ("k_scales", "v_scales"):
+        if name in out:
+            x = out[name]
+            axes = (None,) * (x.ndim - 1) + ("model",)
+            out[name] = maybe_constrain(x, *axes)
+    return out
+
+
 def paged_views(cache: dict):
     """(k_pages, v_pages, k_scales, v_scales, block_table) — scales are
     None for bf16 pools."""

@@ -10,7 +10,42 @@ pods, ICI within).
 """
 from __future__ import annotations
 
+import os
+import re
+
 import jax
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _backend_initialized() -> bool:
+    """True once jax has instantiated a backend (XLA_FLAGS is frozen)."""
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:
+        return True            # cannot tell: assume live, don't mutate env
+
+
+def ensure_host_devices(n: int) -> bool:
+    """Opt-in: make the host CPU platform expose ``n`` devices by setting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=n``.
+
+    Must run BEFORE jax initializes its backends (env mutation has no
+    effect afterwards).  Returns True when ``n`` devices are or will be
+    visible; False when the backend already came up with fewer — callers
+    (multi-device CPU tests, the sharded benchmark) should skip cleanly
+    on False rather than assert.
+    """
+    if _backend_initialized():
+        return len(jax.devices()) >= n
+    cur = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG in cur:
+        cur = re.sub(rf"{_FORCE_FLAG}=\d+", f"{_FORCE_FLAG}={n}", cur)
+    else:
+        cur = f"{cur} {_FORCE_FLAG}={n}".strip()
+    os.environ["XLA_FLAGS"] = cur
+    return True
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,7 +57,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(*, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model:
+        raise ValueError(
+            f"make_host_mesh(model={model}): {n} visible "
+            f"device{'s' if n != 1 else ''} "
+            f"({jax.default_backend()}) not divisible by the model axis. "
+            f"On CPU, force more host devices BEFORE jax initializes: "
+            f"XLA_FLAGS={_FORCE_FLAG}=N or "
+            f"repro.launch.mesh.ensure_host_devices(N).")
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 

@@ -66,8 +66,20 @@ class CollectiveStats:
     def total_bytes(self) -> float:
         return sum(self.bytes_by_op.values())
 
-    def to_dict(self):
-        return asdict(self)
+    def to_dict(self, steps: int = 1):
+        """Dict form for reports/JSON.  ``steps`` divides the totals into
+        a per-step breakdown (e.g. a compiled decode dispatch covering
+        ``decode_block`` scan steps): per collective op, bytes moved per
+        step, plus the per-step total — the number the sharded-serving
+        benchmark and the cost model's ICI term talk about."""
+        out = asdict(self)
+        out["total_bytes"] = self.total_bytes
+        if steps != 1:
+            out["steps"] = steps
+            out["bytes_per_step_by_op"] = {
+                op: b / steps for op, b in self.bytes_by_op.items()}
+            out["total_bytes_per_step"] = self.total_bytes / steps
+        return out
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:

@@ -118,6 +118,19 @@ def main(argv=None):
                          "kernels (activation quant + scale/bias "
                          "epilogue fused); 'ref' is the jnp oracle "
                          "(debug / A-B only)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="serve over a mesh with this 'model'-axis size "
+                         "(kv-head-sharded paged attention + TP weights + "
+                         "sequence-parallel chunked prefill; implies the "
+                         "paged engine).  On CPU force host devices first: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
+    ap.add_argument("--tp-attn-impl", default="kv_shard",
+                    choices=["kv_shard", "gather"],
+                    help="sharded paged-attention arm: 'kv_shard' keeps "
+                         "KV local per shard; 'gather' is the naive "
+                         "output-all-gather TP baseline (collective-byte "
+                         "A/B only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -134,7 +147,14 @@ def main(argv=None):
                     # quant_matmul_impl selects the fused Pallas kernels
                     # for every inference forward
                     quant=args.quant,
-                    quant_matmul_impl=args.quant_impl)
+                    quant_matmul_impl=args.quant_impl,
+                    tp_attn_impl=args.tp_attn_impl)
+    mesh = None
+    if args.model_parallel > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.model_parallel)
+        print(f"[serve] mesh {dict(mesh.shape)} over "
+              f"{len(jax.devices())} {jax.default_backend()} devices")
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     if args.quant != "bf16":
@@ -147,7 +167,7 @@ def main(argv=None):
         sched_kw = dict(n_slots=args.slots,
                         max_len=args.max_len, seed=args.seed,
                         page_size=args.page_size,
-                        decode_block=args.decode_block,
+                        decode_block=args.decode_block, mesh=mesh,
                         policy=args.policy or "fcfs",
                         prefix_cache=args.prefix_cache,
                         prefill_chunk=args.prefill_chunk,
@@ -190,12 +210,14 @@ def main(argv=None):
         else:
             from repro.sched import SchedEngine
             eng = SchedEngine(lm, params, **sched_kw)
-    elif args.paged:
+    elif args.paged or mesh is not None:
+        # --model-parallel implies the paged engine: the sharded serving
+        # path is the kv-head-sharded paged attention stack
         from repro.serve.engine import PagedEngine
         eng = PagedEngine(lm, params, n_slots=args.slots,
                           max_len=args.max_len, seed=args.seed,
                           page_size=args.page_size,
-                          decode_block=args.decode_block)
+                          decode_block=args.decode_block, mesh=mesh)
     else:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
                      seed=args.seed)
@@ -223,7 +245,7 @@ def main(argv=None):
                 f"{eng.sync_count} host syncs")
     elif args.policy:
         mode = f"sched/{args.policy}, {eng.sync_count} host syncs"
-    elif args.paged:
+    elif args.paged or mesh is not None:
         mode = f"paged, {eng.sync_count} host syncs"
     else:
         mode = "eager, 1 sync/token"

@@ -374,7 +374,8 @@ def attention_prefill(p: dict, x: jax.Array, a: AttentionConfig, cache: dict, *,
 
 def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
                             cache: dict, spos, *, style: str = "full",
-                            use_kernel: bool = True) -> tuple[jax.Array, dict]:
+                            use_kernel: bool = True, mesh=None,
+                            tp_impl: str = "kv_shard") -> tuple[jax.Array, dict]:
     """Chunked / continuation prefill directly against a paged KV cache.
 
     x: (B, c, d) — one prompt chunk per admitted row; ``spos`` is
@@ -419,14 +420,18 @@ def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
     k_new = apply_rope(k_new, apos, a.rope_theta)
     k_new = _merge_heads(k_new, kvh_store)
     v_new = _merge_heads(v_new, kvh_store)
-    # pin the cache-bound k/v to batch sharding before the pool scatter —
-    # same resharding-storm guard as attention_prefill's cache write
+    # pin the cache-bound k/v to batch × kv-head sharding before the pool
+    # scatter — batch over DP (the old resharding-storm guard), kv heads
+    # over "model" to match the sharded pools (the scatter is then a
+    # purely local slice per shard; maybe_constrain degrades either axis
+    # when absent or non-dividing)
     from repro.sharding.ctx import maybe_constrain
-    k_new = maybe_constrain(k_new, ("pod", "data"), None, None, None)
-    v_new = maybe_constrain(v_new, ("pod", "data"), None, None, None)
+    k_new = maybe_constrain(k_new, ("pod", "data"), None, "model", None)
+    v_new = maybe_constrain(v_new, ("pod", "data"), None, "model", None)
 
     cache = kvcache.paged_scatter_prefill(cache, slot_ids, lengths,
                                           k_new, v_new, starts)
+    cache = kvcache.constrain_paged_pools(cache)
 
     # prefix < starts[b] streamed from the pages; the chunk's own
     # just-scattered rows are masked out in favour of the fresh values
@@ -437,7 +442,8 @@ def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
         rows = rows[:, :max_pages]
     o = paged_prefix_extend_attention(q, kp, vp, rows, starts,
                                       k_new, v_new, lengths, k_sc, v_sc,
-                                      use_kernel=use_kernel)
+                                      use_kernel=use_kernel, mesh=mesh,
+                                      tp_impl=tp_impl)
     o = o.reshape(b, c, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
     return y, cache
@@ -445,8 +451,8 @@ def attention_prefill_paged(p: dict, x: jax.Array, a: AttentionConfig,
 
 def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
                            cache: dict, stage: dict, spos, *,
-                           style: str = "full",
-                           use_kernel: bool = True) -> tuple:
+                           style: str = "full", use_kernel: bool = True,
+                           mesh=None, tp_impl: str = "kv_shard") -> tuple:
     """Speculative-verify attention: score W draft positions per slot in
     ONE dispatch against the paged cache (``repro.spec``).
 
@@ -493,8 +499,8 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
     k_new = _merge_heads(k_new, kvh_store)
     v_new = _merge_heads(v_new, kvh_store)
     from repro.sharding.ctx import maybe_constrain
-    k_new = maybe_constrain(k_new, ("pod", "data"), None, None, None)
-    v_new = maybe_constrain(v_new, ("pod", "data"), None, None, None)
+    k_new = maybe_constrain(k_new, ("pod", "data"), None, "model", None)
+    v_new = maybe_constrain(v_new, ("pod", "data"), None, "model", None)
 
     stage = kvcache.prefill_write(stage, {"k": k_new, "v": v_new})
     kp, vp, k_sc, v_sc, bt = kvcache.paged_views(cache)
@@ -503,7 +509,8 @@ def attention_verify_paged(p: dict, x: jax.Array, a: AttentionConfig,
     o = paged_prefix_extend_attention(q, kp, vp, bt, lengths,
                                       k_new.astype(jnp.bfloat16),
                                       v_new.astype(jnp.bfloat16), widths,
-                                      k_sc, v_sc, use_kernel=use_kernel)
+                                      k_sc, v_sc, use_kernel=use_kernel,
+                                      mesh=mesh, tp_impl=tp_impl)
     o = o.reshape(b, w, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
     return y, stage
@@ -572,8 +579,9 @@ def attention_decode(p: dict, x: jax.Array, a: AttentionConfig, cache: dict,
 
 def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
                            cache: dict, pos: jax.Array, *,
-                           style: str = "full",
-                           use_kernel: bool = True) -> tuple[jax.Array, dict]:
+                           style: str = "full", use_kernel: bool = True,
+                           mesh=None,
+                           tp_impl: str = "kv_shard") -> tuple[jax.Array, dict]:
     """One-token decode against a paged KV cache, ALL slots in one kernel
     launch (``decode_attn_impl == "paged_pallas"``).
 
@@ -601,11 +609,18 @@ def attention_decode_paged(p: dict, x: jax.Array, a: AttentionConfig,
     k_new = apply_rope(k_new, posv, a.rope_theta)
     k_new = _merge_heads(k_new, kvh_store)[:, 0]               # (S,KH,D)
     v_new = _merge_heads(v_new, kvh_store)[:, 0]
+    # kv-head-pin the token write to match the sharded pools (local write
+    # per shard; degrades off-mesh / non-dividing)
+    from repro.sharding.ctx import maybe_constrain
+    k_new = maybe_constrain(k_new, None, "model", None)
+    v_new = maybe_constrain(v_new, None, "model", None)
 
     cache = kvcache.paged_write_batch(cache, pos, k_new, v_new)
+    cache = kvcache.constrain_paged_pools(cache)
     k_pages, v_pages, k_sc, v_sc, bt = kvcache.paged_views(cache)
     o = paged_attention(q, k_pages, v_pages, bt, pos + 1, k_sc, v_sc,
-                        use_kernel=use_kernel)                 # (S,H,D)
+                        use_kernel=use_kernel, mesh=mesh,
+                        tp_impl=tp_impl)                       # (S,H,D)
     o = o.reshape(b, 1, a.heads_padded * a.head_dim)
     y = linear_apply(p["wo"], _mask_pad_heads(o.astype(x.dtype), a))
     return y, cache

@@ -7,11 +7,34 @@ shard.
 """
 from __future__ import annotations
 
+import contextlib
+from contextvars import ContextVar
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.sharding.annotate import logical
+
+# f32-accumulated dense matmuls (sharded serving).  When a linear's
+# contraction dim is row-sharded over "model", GSPMD all-reduces the
+# partial products; with a bf16 matmul each shard rounds its partial to
+# bf16 BEFORE the reduce, so the sharded result drifts from the
+# single-device one and greedy decode stops being token-identical.
+# Under this flag the dense branch keeps the dot in f32 (GSPMD then
+# psums f32 partials) and rounds to the activation dtype ONCE after —
+# the same value a single device computes.  Entered at trace time by
+# LM.backbone when cfg.model_parallel > 1 (inference only).
+_F32_ACCUM: ContextVar[bool] = ContextVar("repro_f32_accum", default=False)
+
+
+@contextlib.contextmanager
+def f32_accum(enabled: bool = True):
+    tok = _F32_ACCUM.set(bool(enabled))
+    try:
+        yield
+    finally:
+        _F32_ACCUM.reset(tok)
 
 
 def dtype_of(name: str):
@@ -44,7 +67,12 @@ def linear_apply(p: dict, x: jax.Array) -> jax.Array:
         from repro.quant.qops import quantized_matmul
         y = quantized_matmul(x, p, bias=p.get("b"))
     else:
-        y = x @ p["w"].astype(x.dtype)
+        if _F32_ACCUM.get():
+            y = jnp.matmul(x, p["w"].astype(x.dtype),
+                           preferred_element_type=jnp.float32
+                           ).astype(x.dtype)
+        else:
+            y = x @ p["w"].astype(x.dtype)
         if "b" in p:
             y = y + p["b"].astype(y.dtype)
     if "lora" in p:

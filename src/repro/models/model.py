@@ -96,9 +96,16 @@ class LM:
         # each jitted program.  Training forwards stay on the jnp ref
         # path: Pallas kernels are not differentiable (QLoRA backprops
         # through quantized_matmul).
+        from repro.models.layers import f32_accum
         from repro.quant.qops import quant_impl
         impl = "ref" if train else cfg.quant_matmul_impl
-        with quant_impl(impl):
+        # Sharded serving keeps dense matmuls f32-accumulated so the TP
+        # psum over row-sharded contractions reduces f32 partials and
+        # rounds once — greedy decode stays token-identical to a single
+        # device (see models/layers.f32_accum).  Quantized matmuls need
+        # no flag: int8 partial sums are exact in any reduce order.
+        with quant_impl(impl), \
+                f32_accum(cfg.model_parallel > 1 and not train):
             x = embedding_apply(params["embed"], tokens).astype(self.dtype)
             x = maybe_constrain(x, ("pod", "data"), None, None)
             cross_src = None

@@ -159,6 +159,13 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
     new_cache: Dict[str, Any] = {}
     aux_total: Dict[str, jax.Array] = {}
     a = cfg.attention
+    # mesh-sharded paged attention (serving TP): the paged entry points
+    # shard_map their kernels over the "model" axis by kv head.  Gated on
+    # cfg.model_parallel so single-device traces stay byte-identical.
+    from repro.sharding.ctx import current_mesh
+    tp_kw = {}
+    if cfg.model_parallel > 1:
+        tp_kw = dict(mesh=current_mesh(), tp_impl=cfg.tp_attn_impl)
     for i, bk in enumerate(kinds):
         blk = gp[f"blk{i}"]
         c = cache[f"blk{i}"] if cache is not None else None
@@ -182,7 +189,7 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                 y, stage = attn_mod.attention_verify_paged(
                     blk["attn"], h, a, c["kv"], c["stage"], pos,
                     style=cfg.kv_cache_style,
-                    use_kernel=cfg.chunk_prefill_impl != "eager")
+                    use_kernel=cfg.chunk_prefill_impl != "eager", **tp_kw)
                 nc["stage"] = stage
             elif mode == "prefill":
                 if "k_pages" in c["kv"]:
@@ -192,20 +199,20 @@ def group_forward(gp: dict, x: jax.Array, cfg: ModelConfig, *,
                     y, kv = attn_mod.attention_prefill_paged(
                         blk["attn"], h, a, c["kv"], pos,
                         style=cfg.kv_cache_style,
-                        use_kernel=cfg.chunk_prefill_impl != "eager")
+                        use_kernel=cfg.chunk_prefill_impl != "eager",
+                        **tp_kw)
                 else:
                     y, kv = attn_mod.attention_prefill(
                         blk["attn"], h, a, c["kv"], style=cfg.kv_cache_style,
                         use_flash=cfg.use_kernels, **chunk_kw)
                 nc["kv"] = kv
             else:  # decode
-                from repro.sharding.ctx import current_mesh
                 mesh = current_mesh()
                 if "k_pages" in c["kv"]:
                     # paged cache present <=> decode_attn_impl="paged_pallas"
                     y, kv = attn_mod.attention_decode_paged(
                         blk["attn"], h, a, c["kv"], pos,
-                        style=cfg.kv_cache_style)
+                        style=cfg.kv_cache_style, **tp_kw)
                 elif (cfg.decode_attn_impl == "cp" and mesh is not None
                         and a.kind != "mla" and "k_scale" not in c["kv"]):
                     # CP decode reads/writes shard-local slabs inside

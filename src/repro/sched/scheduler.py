@@ -350,14 +350,16 @@ class SchedEngine(PagedEngine):
                 mp = min(_pow2_bucket(-(-int(starts.max())
                                         // self.page_size), lo=1),
                          self.alloc.max_pages_per_slot)
-                tok, self.cache = self._chunk_jit(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(slots), jnp.asarray(starts),
-                    jnp.asarray(clens), temps, sub, max_pages=mp)
+                with self._mesh_ctx():
+                    tok, self.cache = self._chunk_jit(
+                        self.params, self.cache, jnp.asarray(tokens),
+                        jnp.asarray(slots), jnp.asarray(starts),
+                        jnp.asarray(clens), temps, sub, max_pages=mp)
             else:
-                tok, self.cache = self._admit_jit(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(slots), jnp.asarray(clens), temps, sub)
+                with self._mesh_ctx():
+                    tok, self.cache = self._admit_jit(
+                        self.params, self.cache, jnp.asarray(tokens),
+                        jnp.asarray(slots), jnp.asarray(clens), temps, sub)
             tok = np.asarray(tok)            # <- sync (1 per chunk batch)
             self.sync_count += 1
             self.t_prefill_s += time.perf_counter() - t0

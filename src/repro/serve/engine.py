@@ -24,6 +24,7 @@ loop of batch-1 launches.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -268,15 +269,27 @@ class PagedEngine(_EngineBase):
 
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
                  eos_id: int = -1, seed: int = 0, page_size: int = PAGE,
-                 decode_block: int = 8, n_pages: Optional[int] = None):
+                 decode_block: int = 8, n_pages: Optional[int] = None,
+                 mesh=None):
         cfg = lm.cfg
         a = cfg.attention
         assert a is not None and a.kind != "mla" and a.window is None \
             and cfg.encoder is None and cfg.cross_attn_every == 0 \
             and all(k == "attn" for k in cfg.block_pattern), \
             "PagedEngine needs an attention-only decoder"
+        # sharded serving: a mesh with a "model" axis > 1 turns on
+        # kv-head-sharded paged attention (kernels/paged_attention/ops),
+        # TP weight sharding (sharding/rules) and sequence-parallel
+        # chunked prefill; mesh=None is byte-identical to the old path
+        self.mesh = mesh
+        mp = 1 if mesh is None else int(mesh.shape.get("model", 1))
+        cfg_kw = {}
         if cfg.decode_attn_impl != "paged_pallas":
-            lm = type(lm)(cfg.with_(decode_attn_impl="paged_pallas"))
+            cfg_kw["decode_attn_impl"] = "paged_pallas"
+        if mp > 1:
+            cfg_kw.update(model_parallel=mp, seq_parallel=True)
+        if cfg_kw:
+            lm = type(lm)(cfg.with_(**cfg_kw))
         super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
                          eos_id=eos_id)
         self.page_size = page_size
@@ -289,6 +302,13 @@ class PagedEngine(_EngineBase):
         self.alloc = PageAllocator(n_pages, pages_per_slot, n_slots)
         self.cache = lm.init_paged_cache(n_slots, n_pages, pages_per_slot,
                                          page_size=page_size)
+        if mp > 1:
+            from repro.serve.paged import paged_cache_shardings
+            from repro.sharding.rules import make_param_shardings
+            self.params = jax.device_put(
+                params, make_param_shardings(params, mesh))
+            self.cache = jax.device_put(
+                self.cache, paged_cache_shardings(self.cache, mesh))
         self.lengths = np.zeros((n_slots,), np.int32)
         self.temps = np.zeros((n_slots,), np.float32)
         self.remaining = np.zeros((n_slots,), np.int32)
@@ -305,6 +325,15 @@ class PagedEngine(_EngineBase):
 
     # ------------------------------------------------------------------
     # device programs
+
+    def _mesh_ctx(self):
+        """Mesh scope for jit dispatches: inside it ``current_mesh()``
+        resolves for the sharded-attention shard_maps and activation
+        constraints; a no-op for single-device engines."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.sharding.ctx import use_mesh
+        return use_mesh(self.mesh)
 
     def _admit_impl(self, params, cache, tokens, slot_ids, plens, temps,
                     key):
@@ -402,10 +431,11 @@ class PagedEngine(_EngineBase):
                                           self.alloc.table[slot_ids])
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
-        tok0, self.cache = self._admit_jit(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(slot_ids), jnp.asarray(plens),
-            jnp.asarray(self.temps[slot_ids]), sub)
+        with self._mesh_ctx():
+            tok0, self.cache = self._admit_jit(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(slot_ids), jnp.asarray(plens),
+                jnp.asarray(self.temps[slot_ids]), sub)
         tok0 = np.asarray(tok0)                  # <- sync (1 per admit batch)
         self.sync_count += 1
         self.t_prefill_s += time.perf_counter() - t0
@@ -430,10 +460,11 @@ class PagedEngine(_EngineBase):
             active_mask[slot] = True
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
-        out = self._decode_jit(
-            self.params, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.lengths), jnp.asarray(active_mask),
-            jnp.asarray(self.remaining), jnp.asarray(self.temps), sub)
+        with self._mesh_ctx():
+            out = self._decode_jit(
+                self.params, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.lengths), jnp.asarray(active_mask),
+                jnp.asarray(self.remaining), jnp.asarray(self.temps), sub)
         self.cache = out[0]
         # ONE sync for the whole K-token block (writable host copies):
         toks, emits, last, lengths, active, remaining = (

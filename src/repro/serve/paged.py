@@ -232,16 +232,21 @@ def scatter_prefill_cache(paged_cache, contig_cache, slot_ids, lengths,
     paged engine gates on attention-only models.
     """
     if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
+        from repro.kvcache import constrain_paged_pools
         k_rows, v_rows = contig_cache["k"], contig_cache["v"]
         if "k_scale" in contig_cache:
             k_rows = dequantize(k_rows, contig_cache["k_scale"])
             v_rows = dequantize(v_rows, contig_cache["v_scale"])
         if paged_cache["k_pages"].ndim == 5:   # (G, N, page, KH, D) stacked
-            return jax.vmap(paged_scatter_prefill,
-                            in_axes=(0, None, None, 0, 0, None))(
+            out = jax.vmap(paged_scatter_prefill,
+                           in_axes=(0, None, None, 0, 0, None))(
                 paged_cache, slot_ids, lengths, k_rows, v_rows, starts)
-        return paged_scatter_prefill(paged_cache, slot_ids, lengths,
-                                     k_rows, v_rows, starts)
+        else:
+            out = paged_scatter_prefill(paged_cache, slot_ids, lengths,
+                                        k_rows, v_rows, starts)
+        # re-pin (kv-head sharding; ndim-relative, so the stacked case
+        # pins the same dims) so the admitted pools leave the jit sharded
+        return constrain_paged_pools(out)
     if isinstance(paged_cache, dict):
         return {k: scatter_prefill_cache(paged_cache[k], contig_cache[k],
                                          slot_ids, lengths, starts)
@@ -264,7 +269,7 @@ def commit_spec_cache(paged_cache, stage_cache, lengths, n_write):
     and requant events — evolve just as ``decode_block`` steps would
     have.  Rejected draft K/V is simply never written: rollback is a
     pure host-side length truncation."""
-    from repro.kvcache import paged_write_batch
+    from repro.kvcache import constrain_paged_pools, paged_write_batch
     if isinstance(paged_cache, dict) and "k_pages" in paged_cache:
         k_rows, v_rows = stage_cache["k"], stage_cache["v"]
         w = k_rows.shape[-3]
@@ -275,7 +280,7 @@ def commit_spec_cache(paged_cache, stage_cache, lengths, n_write):
                                          v_r[:, i],
                                          mask=i < n_write), None
             node, _ = jax.lax.scan(body, node, jnp.arange(w))
-            return node
+            return constrain_paged_pools(node)
 
         if paged_cache["k_pages"].ndim == 5:   # (G, N, page, KH, D) stacked
             return jax.vmap(commit_node)(paged_cache, k_rows, v_rows)
@@ -307,6 +312,33 @@ def set_block_table_rows(cache, slots, rows):
                 return l.at[:, slots, :].set(rows[None])
             return l.at[slots].set(rows)
         return l
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def paged_cache_shardings(cache, mesh):
+    """NamedSharding pytree for a paged model cache on a serving mesh:
+    page pools (…, page, KH, D) and scale tensors (…, KH) sharded BY KV
+    HEAD over the "model" axis (matching the kernel's shard_map specs —
+    see ``kernels/paged_attention/ops.py``), block tables and anything
+    else replicated.  KV-head dims the axis does not divide replicate.
+    Engines ``jax.device_put`` their freshly-allocated cache through this
+    once so the pools START life sharded instead of being resharded on
+    the first dispatch."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = mesh.shape.get("model", 1)
+
+    def leaf(path, l):
+        key = jax.tree_util.keystr(path)
+        if ("k_pages" in key or "v_pages" in key) \
+                and l.shape[l.ndim - 2] % m == 0:
+            axes = (None,) * (l.ndim - 2) + ("model", None)
+        elif ("k_scales" in key or "v_scales" in key) \
+                and l.shape[l.ndim - 1] % m == 0:
+            axes = (None,) * (l.ndim - 1) + ("model",)
+        else:
+            axes = (None,) * l.ndim
+        return NamedSharding(mesh, P(*axes))
 
     return jax.tree_util.tree_map_with_path(leaf, cache)
 

@@ -81,11 +81,20 @@ RULES = [
     (r"/lora/a$", _p(None, None)),
     (r"/lora/b$", _p(None, "model")),
     (r"/lora/m$", _p("model")),
-    # --- quantized weights inherit the dense layout ---
+    # --- quantized weights inherit the dense layout; per-channel scale
+    # and bias leaves follow their weight's sharded OUTPUT axis (a
+    # replicated scale under a col-sharded qw would break the fused
+    # scale/bias epilogue's local application) ---
     (r"/(gate|up|wq|wk|wv|q_up|kv_up_k|kv_up_v)/qw$", _p(None, "model")),
     (r"/(down|wo)/qw$", _p("model", None)),
     (r"/(gate|up|wq|wk|wv|q_up|kv_up_k|kv_up_v)/scale$", _p("model")),
     (r"/(down|wo)/scale$", _p(None)),
+    (r"(^|/)(lm_head|unembed)/qw$", _p(None, "model")),
+    (r"(^|/)(lm_head|unembed)/scale$", _p("model")),
+    (r"/mlp/(gate|up)/b$", _p("model")),
+    (r"/moe/shared/(gate|up)/b$", _p("model")),
+    # (down/wo biases add AFTER the row-shard contraction: replicate —
+    # the catch-all below already does that)
     # --- norms, biases, scalars: replicate ---
     (r".*", lambda shape, ctx: P(*((None,) * len(shape)))),
 ]

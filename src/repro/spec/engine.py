@@ -160,6 +160,20 @@ class SpecEngine(SchedEngine):
         elif spec == "draft":
             if draft_lm is None or draft_params is None:
                 raise ValueError("spec='draft' needs draft_lm/draft_params")
+            mp = 1 if self.mesh is None \
+                else int(self.mesh.shape.get("model", 1))
+            if mp > 1:
+                # the draft LM serves on the same mesh: TP-shard its
+                # weights and mark its cfg so its dense matmuls f32-
+                # accumulate too (drafts only steer acceptance — output
+                # identity comes from verify — but a replicated draft
+                # would serialize every shard on identical work)
+                from repro.sharding.rules import make_param_shardings
+                draft_lm = type(draft_lm)(draft_lm.cfg.with_(
+                    model_parallel=mp))
+                draft_params = jax.device_put(
+                    draft_params,
+                    make_param_shardings(draft_params, self.mesh))
             self.drafter = DraftLMDrafter(
                 draft_lm, draft_params, n_slots=self.n_slots,
                 max_len=self.max_len + 2 * self.w_max, k_max=self.k_max)
@@ -256,7 +270,8 @@ class SpecEngine(SchedEngine):
                                    np.asarray(req.out_tokens, np.int32)])
             batch.append((slot, req.rid, hist, k))
         t0 = time.perf_counter()
-        proposals = self.drafter.propose_batch(batch, self.k_max)
+        with self._mesh_ctx():
+            proposals = self.drafter.propose_batch(batch, self.k_max)
         # drafting is decode-phase work (the draft-LM arm is a real
         # dispatch + sync): charge it, or the benchmark's phase split
         # would overstate spec decode throughput
@@ -297,11 +312,12 @@ class SpecEngine(SchedEngine):
         mp = min(_pow2_bucket(-(-int(self.lengths.max())
                                // self.page_size), lo=1),
                  self.alloc.max_pages_per_slot)
-        out = self._verify_jit(
-            self.params, self.cache, jnp.asarray(fed),
-            jnp.asarray(self.lengths), jnp.asarray(widths),
-            jnp.asarray(active_mask), jnp.asarray(self.remaining),
-            jnp.asarray(self.temps), sub, max_pages=mp)
+        with self._mesh_ctx():
+            out = self._verify_jit(
+                self.params, self.cache, jnp.asarray(fed),
+                jnp.asarray(self.lengths), jnp.asarray(widths),
+                jnp.asarray(active_mask), jnp.asarray(self.remaining),
+                jnp.asarray(self.temps), sub, max_pages=mp)
         self.cache = out[0]
         y, n_emit, n_match, last, lengths, active, remaining = (
             np.array(x) for x in out[1:])
