@@ -196,6 +196,40 @@ def method_rows(model: str, tasks, *, seed=0) -> dict:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Shared measurement helpers (serving benchmarks)
+
+
+def percentiles(xs, *, scale=1e3, digits=3) -> dict:
+    """p50/p99 of ``xs`` (seconds by default, reported in ms)."""
+    if not xs:
+        return {"p50": None, "p99": None}
+    return {"p50": round(float(np.percentile(xs, 50)) * scale, digits),
+            "p99": round(float(np.percentile(xs, 99)) * scale, digits)}
+
+
+def interleaved_median_drives(engines: dict, drive, reps: int, key) -> dict:
+    """Warm every engine once (compiles all bucketed dispatch shapes),
+    then interleave ``reps`` measured drives ACROSS the arms — a smoke
+    drive is tens of ms, so single drives are noise-dominated and
+    sequential arms pick up system drift — and return each arm's median
+    drive result ranked by ``key(result)``.
+
+    ``engines``: arm name -> engine; ``drive(eng)`` runs one drive and
+    returns its result (e.g. ``run_engine``'s (row, outs) tuple)."""
+    for eng in engines.values():
+        drive(eng)                               # warm-up: compile
+    drives = {arm: [] for arm in engines}
+    for _ in range(max(reps, 1)):
+        for arm, eng in engines.items():
+            drives[arm].append(drive(eng))
+    out = {}
+    for arm, rows in drives.items():
+        rows.sort(key=key)
+        out[arm] = rows[len(rows) // 2]
+    return out
+
+
 def dump(name: str, payload) -> pathlib.Path:
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     p = OUT_DIR / f"{name}.json"

@@ -81,12 +81,7 @@ import numpy as np
 OUT_DEFAULT = (pathlib.Path(__file__).resolve().parent.parent
                / "experiments" / "bench" / "BENCH_serving_throughput.json")
 
-
-def _percentiles(xs):
-    if not xs:
-        return {"p50": None, "p99": None}
-    return {"p50": round(float(np.percentile(xs, 50)) * 1e3, 3),
-            "p99": round(float(np.percentile(xs, 99)) * 1e3, 3)}
+from common import interleaved_median_drives, percentiles as _percentiles  # noqa: E402
 
 
 def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
@@ -95,13 +90,9 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
     per-request submit offsets in seconds) and return (metrics row,
     per-request out_tokens in submit order)."""
     from repro.serve.engine import run_open_loop
-    # snapshot cumulative counters so a reused engine (warmed-up second
-    # pass) reports this drive's deltas, not its lifetime totals
-    t_pf0 = getattr(eng, "t_prefill_s", 0.0)
-    t_dec0 = getattr(eng, "t_decode_s", 0.0)
-    pt0 = eng.stats.prefill_tokens if hasattr(eng, "stats") else 0
-    sync0 = getattr(eng, "sync_count", 0)
-    steps0 = getattr(eng, "steps_dispatched", 0)
+    # registry snapshot -> delta: a reused engine (warmed-up second
+    # pass) reports this drive's numbers, not its lifetime totals
+    snap0 = eng.metrics.snapshot()
     t0 = time.perf_counter()
     if arrivals is None:
         ids = [eng.submit(p, max_new_tokens=max_new,
@@ -157,37 +148,41 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
             **att,
             "goodput_tokens_per_sec": round(met_both_tokens / dt, 2),
         }
+    # the metrics registry is the one read surface: everything below is
+    # this drive's delta (repro.obs.metrics), not engine lifetime totals
+    c = eng.metrics.delta(snap0)["counters"]
     if hasattr(eng, "sync_count"):
-        syncs = eng.sync_count - sync0
+        syncs = int(c.get("serve_host_syncs_total", 0))
         row["host_syncs"] = syncs
-        row["decode_steps"] = eng.steps_dispatched - steps0
+        row["decode_steps"] = int(c.get("serve_decode_steps_total", 0))
         row["tokens_per_sync"] = round(n_tok / max(syncs, 1), 2)
     else:
         row["host_syncs"] = n_tok          # eager: one sync per token
         row["tokens_per_sync"] = 1.0
-    if hasattr(eng, "t_prefill_s"):
-        # phase split: aggregate tokens/sec hides a prefill regression
-        # behind decode throughput — report each phase against its own
-        # dispatch wall-clock (prefill tokens = tokens actually computed,
-        # i.e. prefix-cache hits excluded under the scheduler)
-        p_toks = (eng.stats.prefill_tokens - pt0 if hasattr(eng, "stats")
-                  else sum(len(done[i].prompt) for i in ids))
-        d_toks = max(n_tok - len(ids), 0)  # first tokens: prefill phase
-        pf_s = eng.t_prefill_s - t_pf0
-        dec_s = eng.t_decode_s - t_dec0
-        row["prefill_phase"] = {
-            "tokens": int(p_toks),
-            "seconds": round(pf_s, 3),
-            "tokens_per_sec": round(p_toks / max(pf_s, 1e-9), 2),
-        }
-        row["decode_phase"] = {
-            "tokens": int(d_toks),
-            "seconds": round(dec_s, 3),
-            "tokens_per_sec": round(d_toks / max(dec_s, 1e-9), 2),
-        }
-    if hasattr(eng, "telemetry"):
-        # attainment already lives in row["slo"] (one source of truth)
-        row["sched"] = {k: v for k, v in eng.telemetry().items()
+    # phase split: aggregate tokens/sec hides a prefill regression
+    # behind decode throughput — report each phase against its own
+    # dispatch wall-clock (prefill tokens = tokens actually computed,
+    # i.e. prefix-cache hits excluded under the scheduler)
+    p_toks = (int(c["sched_prefill_tokens_total"])
+              if "sched_prefill_tokens_total" in c
+              else sum(len(done[i].prompt) for i in ids))
+    d_toks = max(n_tok - len(ids), 0)      # first tokens: prefill phase
+    pf_s = c.get('serve_phase_seconds_total{phase="prefill"}', 0.0)
+    dec_s = c.get('serve_phase_seconds_total{phase="decode"}', 0.0)
+    row["prefill_phase"] = {
+        "tokens": int(p_toks),
+        "seconds": round(pf_s, 3),
+        "tokens_per_sec": round(p_toks / max(pf_s, 1e-9), 2),
+    }
+    row["decode_phase"] = {
+        "tokens": int(d_toks),
+        "seconds": round(dec_s, 3),
+        "tokens_per_sec": round(d_toks / max(dec_s, 1e-9), 2),
+    }
+    if hasattr(eng, "stats"):
+        # attainment already lives in row["slo"] (one source of truth);
+        # since=snap0 keeps warmed-up engines reporting per-drive numbers
+        row["sched"] = {k: v for k, v in eng.telemetry(since=snap0).items()
                         if k != "slo"}
     return row, [list(done[i].out_tokens) for i in ids]
 
@@ -463,20 +458,22 @@ def main(argv=None):
                    seed=args.seed, page_size=args.page_size,
                    decode_block=args.decode_block,
                    prefill_chunk=args.prefill_chunk, policy=pol)
-        runs = {}
-        for name, lm_run in (
+        chunk_engines = {
+            name: SchedEngine(lm_run, params, prefix_cache=False, **ckw)
+            for name, lm_run in (
                 ("fused", lm_paged),
                 ("eager", LM(lm_paged.cfg.with_(chunk_prefill_impl="eager"))),
-        ):
-            eng = SchedEngine(lm_run, params, prefix_cache=False, **ckw)
-            # first drive compiles every bucketed dispatch shape; the
-            # measured second drive is steady-state (run_engine reports
-            # per-drive counter deltas)
-            run_engine(eng, prompts, args.max_new, args.temperature,
-                       arrivals=arrivals)
-            row, outs = run_engine(eng, prompts, args.max_new,
-                                   args.temperature, arrivals=arrivals)
-            runs[name] = (row, outs, eng)
+            )}
+        # warm-up drive compiles every bucketed dispatch shape; the
+        # measured drive is steady-state (run_engine reports per-drive
+        # registry deltas) — same common.py helper as the quant section
+        med = interleaved_median_drives(
+            chunk_engines,
+            lambda eng: run_engine(eng, prompts, args.max_new,
+                                   args.temperature, arrivals=arrivals),
+            1, key=lambda ro: ro[0]["prefill_phase"]["tokens_per_sec"])
+        runs = {name: (med[name][0], med[name][1], chunk_engines[name])
+                for name in chunk_engines}
         warm_identical = None
         if args.shared_prefix > 0:
             weng = SchedEngine(lm_paged, params, prefix_cache=True, **ckw)
@@ -622,34 +619,26 @@ def main(argv=None):
         qparams = quantize_tree(qbase, quant=args.quant)
 
         def quant_engine(lm_run, p_run):
-            eng = PagedEngine(lm_run, p_run, n_slots=args.slots,
-                              max_len=args.max_len, seed=args.seed,
-                              page_size=args.page_size,
-                              decode_block=args.decode_block)
-            run_engine(eng, prompts, args.max_new, args.temperature,
-                       arrivals=arrivals)          # warm-up: compile
-            return eng
+            return PagedEngine(lm_run, p_run, n_slots=args.slots,
+                               max_len=args.max_len, seed=args.seed,
+                               page_size=args.page_size,
+                               decode_block=args.decode_block)
 
-        # one smoke drive's decode wall-clock is tens of ms, so single
-        # drives are noise-dominated and sequential arms pick up system
-        # drift — interleave --quant-reps measured drives across the
-        # arms and report each arm's median decode-phase drive
+        def drive(eng):
+            return run_engine(eng, prompts, args.max_new,
+                              args.temperature, arrivals=arrivals)
+
+        # median-of-N interleaved drives (common.py): one smoke drive's
+        # decode wall-clock is tens of ms, so single drives are noise-
+        # dominated and sequential arms pick up system drift
         engines = {"bf16": quant_engine(LM(qcfg), qbase)}
         for impl in ("fused", "ref"):
             lm_q = LM(qcfg.with_(quant=args.quant,
                                  quant_matmul_impl=impl))
             engines[impl] = quant_engine(lm_q, qparams)
-        drives = {a: [] for a in engines}
-        for _ in range(args.quant_reps):
-            for a, eng in engines.items():
-                drives[a].append(run_engine(eng, prompts, args.max_new,
-                                            args.temperature,
-                                            arrivals=arrivals))
-        arms = {}
-        for a, rows in drives.items():
-            rows.sort(key=lambda ro: ro[0]["decode_phase"]
-                      ["tokens_per_sec"])
-            arms[a] = rows[len(rows) // 2]
+        arms = interleaved_median_drives(
+            engines, drive, args.quant_reps,
+            key=lambda ro: ro[0]["decode_phase"]["tokens_per_sec"])
         b_row, b_outs = arms["bf16"]
         f_row, f_outs = arms["fused"]
         r_row, r_outs = arms["ref"]
@@ -667,11 +656,12 @@ def main(argv=None):
         if args.quant != "fp8":
             lm_f8 = LM(qcfg.with_(quant="fp8",
                                   quant_matmul_impl="fused"))
-            f8_eng = quant_engine(lm_f8, quantize_tree(qbase,
-                                                       quant="fp8"))
-            _, f8_outs = run_engine(f8_eng, prompts, args.max_new,
-                                    args.temperature, arrivals=arrivals)
-            fp8_agree = agreement(f8_outs, b_outs)
+            f8 = interleaved_median_drives(
+                {"fp8": quant_engine(lm_f8,
+                                     quantize_tree(qbase, quant="fp8"))},
+                drive, 1,
+                key=lambda ro: ro[0]["decode_phase"]["tokens_per_sec"])
+            fp8_agree = agreement(f8["fp8"][1], b_outs)
 
         # cost-model HBM split at the FULL arch size (the smoke model is
         # shape-preserving but tiny; the claim is about the real weight

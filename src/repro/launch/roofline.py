@@ -81,6 +81,24 @@ class CollectiveStats:
             out["total_bytes_per_step"] = self.total_bytes / steps
         return out
 
+    def register_metrics(self, registry, *, steps: int = 1) -> None:
+        """Fold the collective accounting into a ``repro.obs``
+        :class:`~repro.obs.metrics.MetricsRegistry` snapshot: per-op
+        byte/count gauges (labelled ``op=``) plus the per-step total the
+        cost model's ICI term talks about."""
+        gb = registry.gauge("roofline_collective_bytes",
+                            "per-chip collective bytes in the compiled "
+                            "dispatch")
+        gc = registry.gauge("roofline_collective_count",
+                            "collective instruction count")
+        for op, b in self.bytes_by_op.items():
+            gb.set(b, op=op)
+        for op, n in self.count_by_op.items():
+            gc.set(n, op=op)
+        registry.gauge("roofline_collective_bytes_per_step",
+                       "per-chip collective bytes per decode step").set(
+            self.total_bytes / max(steps, 1))
+
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     """Sum operand byte sizes of every collective in (post-SPMD) HLO."""

@@ -133,6 +133,17 @@ def main(argv=None):
                          "A/B only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the engine's metrics-registry snapshot "
+                         "here after the drive: Prometheus text for "
+                         ".prom/.txt, JSON otherwise (repro.obs.metrics; "
+                         "includes cost-model byte splits and, on a mesh, "
+                         "the compiled decode dispatch's collective "
+                         "bytes)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request lifecycle spans and write "
+                         "Chrome/Perfetto trace-event JSON here (open in "
+                         "ui.perfetto.dev); adds zero host syncs")
     args = ap.parse_args(argv)
 
     from repro.kvcache import normalize_dtype
@@ -163,9 +174,12 @@ def main(argv=None):
         print(f"[serve] weights quantized to {args.quant} "
               f"({args.quant_impl} matmuls)")
 
+    from repro.obs import Tracer
+    tracer = Tracer(enabled=args.trace_out is not None)
     if args.spec != "none" or args.policy:
         sched_kw = dict(n_slots=args.slots,
                         max_len=args.max_len, seed=args.seed,
+                        tracer=tracer,
                         page_size=args.page_size,
                         decode_block=args.decode_block, mesh=mesh,
                         policy=args.policy or "fcfs",
@@ -217,10 +231,11 @@ def main(argv=None):
         eng = PagedEngine(lm, params, n_slots=args.slots,
                           max_len=args.max_len, seed=args.seed,
                           page_size=args.page_size,
-                          decode_block=args.decode_block, mesh=mesh)
+                          decode_block=args.decode_block, mesh=mesh,
+                          tracer=tracer)
     else:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
-                     seed=args.seed)
+                     seed=args.seed, tracer=tracer)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size,
                             (args.prompt_len,)).tolist()
@@ -257,6 +272,42 @@ def main(argv=None):
     for i in ids[:3]:
         print(f"  req {i}: {len(done[i].out_tokens)} tokens "
               f"{done[i].out_tokens[:8]}…")
+
+    if args.metrics:
+        # one snapshot carries engine counters, cost-model byte splits
+        # and (on a mesh) the compiled decode dispatch's collective bytes
+        from repro.core.costmodel import service_estimate
+        est = service_estimate(cfg, prompt=args.prompt_len,
+                               gen=args.max_new, chunk=args.prefill_chunk)
+        eng.metrics.set_gauges(
+            {f"costmodel_{k}": v for k, v in est.items()},
+            help="cost-model roofline estimate at the drive's "
+                 "prompt/gen shape")
+        if mesh is not None and hasattr(eng, "_decode_jit"):
+            from repro.launch.roofline import parse_collectives
+            a2 = (eng.params, eng.cache,
+                  np.zeros((args.slots,), np.int32),
+                  np.zeros((args.slots,), np.int32),
+                  np.zeros((args.slots,), bool),
+                  np.zeros((args.slots,), np.int32),
+                  np.zeros((args.slots,), np.float32),
+                  jax.random.PRNGKey(0))
+            with eng._mesh_ctx():
+                hlo = eng._decode_jit.lower(*a2).compile().as_text()
+            parse_collectives(hlo).register_metrics(
+                eng.metrics, steps=args.decode_block)
+        if str(args.metrics).endswith((".prom", ".txt")):
+            body = eng.metrics.to_prometheus_text()
+        else:
+            body = eng.metrics.to_json(arch=cfg.name,
+                                       engine=type(eng).__name__)
+        with open(args.metrics, "w") as f:
+            f.write(body)
+        print(f"[serve] metrics snapshot -> {args.metrics}")
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"[serve] trace ({len(tracer.events)} events) -> "
+              f"{args.trace_out} (open in ui.perfetto.dev)")
     return 0
 
 

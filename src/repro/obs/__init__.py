@@ -1,0 +1,22 @@
+"""repro.obs — engine observability: metrics registry + request tracing.
+
+``repro.obs.metrics`` is the one place serving telemetry lives: every
+engine (eager / paged / sched / spec), the prefix cache, the page
+allocator, the spec controller, the roofline collective accounting and
+the cost model's byte splits register into a :class:`MetricsRegistry`,
+which exposes lock-free ``snapshot()`` / ``delta()`` reads plus
+Prometheus-text and JSON exporters.  ``repro.obs.trace`` records
+per-request lifecycle spans (submit → queue → admit → prefill-chunk* →
+decode-block* → spec-round* → preempt/readmit → retire) as
+Chrome/Perfetto trace-event JSON.
+
+Instrumentation is sync-free by construction: every span timestamp is a
+host clock the engines already read, and the decode-loop device stats
+ride the existing ``lax.scan`` carry out through the block-boundary
+sync the engines already pay — ``sync_count`` is identical with tracing
+and metrics on.
+"""
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import PID_ENGINE, PID_REQUESTS, Tracer
+
+__all__ = ["MetricsRegistry", "Tracer", "PID_ENGINE", "PID_REQUESTS"]

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import PID_ENGINE
 from repro.sched.policy import Policy, make_policy
 from repro.sched.prefix import PrefixCache
 from repro.serve.engine import PagedEngine, Request, _pow2_bucket, \
@@ -93,6 +94,30 @@ class SchedEngine(PagedEngine):
         self.slo_ttft = slo_ttft
         self.slo_tpot = slo_tpot
         self.stats = SchedStats()
+        # fn-backed registry bridges: SchedStats / PrefixCache stay the
+        # writers (and the tested attribute surface); the registry reads
+        # them at snapshot time, which is what gives telemetry() its
+        # per-drive delta support for free
+        m = self.metrics
+        for f, h in (("admitted", "slot grants (readmits count again)"),
+                     ("preemptions", "policy-chosen page-pressure victims"),
+                     ("chunks", "prefill chunk dispatches"),
+                     ("prefill_tokens", "prompt tokens actually computed"),
+                     ("prefix_hit_tokens", "prompt tokens served from the "
+                      "prefix cache"),
+                     ("slo_rejected", "admission-time SLO-infeasible "
+                      "drops")):
+            m.counter(f"sched_{f}_total", h,
+                      fn=lambda f=f: getattr(self.stats, f))
+        m.gauge("sched_policy_info", "1, labelled with the active policy",
+                fn=lambda: 1.0, policy=self.policy.name)
+        if self.prefix is not None:
+            for f in ("lookups", "hits", "hit_tokens", "inserted",
+                      "evicted"):
+                m.counter(f"prefix_{f}_total", f"prefix cache {f}",
+                          fn=lambda f=f: getattr(self.prefix, f))
+            m.gauge("prefix_cached_pages", "pages pinned by the prefix "
+                    "cache", fn=lambda: len(self.prefix.nodes))
         self._prefilling: Dict[int, Request] = {}    # slot -> mid-prompt req
         # rid -> (len(toks), digest chain): hashing a prompt is O(len),
         # and a page-starved queue is probed every tick — memoize per
@@ -169,6 +194,9 @@ class SchedEngine(PagedEngine):
                 req.done = True
                 req.t_done = now
                 self.stats.slo_rejected += 1
+                self.tracer.end("queue", req.rid, ts=now,
+                                args={"rejected": True})
+                self._obs_retire(req)
 
     def _admit_one(self, req: Request, now: float) -> bool:
         toks = self._sched_tokens(req)
@@ -210,8 +238,12 @@ class SchedEngine(PagedEngine):
         self.queue.remove(req)
         self.free.popleft()
         req.slot = slot
-        if req.t_admit is None:
+        first = req.t_admit is None
+        if first:
             req.t_admit = now
+        self._obs_admit(req, now, first, policy=self.policy.name,
+                        hit_tokens=hit,
+                        pages=len(self.alloc.owned(slot)))
         req.progress = hit
         # While the slot is mid-prefill the fused decode dispatch still
         # lock-step "writes" a garbage token for it at host lengths[slot].
@@ -282,6 +314,12 @@ class SchedEngine(PagedEngine):
         req.preemptions += 1
         self.stats.preemptions += 1
         self.queue.append(req)
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("preempt", req.rid, ts=now,
+                       args={"policy": self.policy.name})
+            # re-open the queue span: the readmit wait is queue time
+            tr.begin("queue", req.rid, ts=now, args={"readmit": True})
 
     # ------------------------------------------------------------------
     # chunked prefill
@@ -362,10 +400,25 @@ class SchedEngine(PagedEngine):
                         jnp.asarray(slots), jnp.asarray(clens), temps, sub)
             tok = np.asarray(tok)            # <- sync (1 per chunk batch)
             self.sync_count += 1
-            self.t_prefill_s += time.perf_counter() - t0
-            self.stats.chunks += 1
             now = time.perf_counter()
+            self.t_prefill_s += now - t0
+            self.stats.chunks += 1
+            self._c_prefill_disp.inc()
+            tr = self.tracer
+            n_ready = len(ready)
+            if tr.enabled:
+                tr.complete("prefill_dispatch", 0, t0, now, pid=PID_ENGINE,
+                            args={"rows": n_ready, "cont": bool(cont),
+                                  "tokens": int(clens[:n_ready].sum())})
             for i, (slot, req, toks, clen) in enumerate(ready):
+                if tr.enabled:
+                    tr.complete(
+                        "prefill_chunk", req.rid, t0, now,
+                        args={"tokens": int(clen),
+                              "start": int(req.progress),
+                              "emitted": int(req.progress + clen
+                                             >= len(toks)
+                                             and not req.out_tokens)})
                 req.progress += clen
                 self.stats.prefill_tokens += clen
                 if req.progress >= len(toks):
@@ -390,6 +443,8 @@ class SchedEngine(PagedEngine):
             req.out_tokens.append(tok0)
             req.pos = total
             req.t_first = now
+            self._obs_first(req)
+            self._c_tokens.inc()
             emitted.append((req.rid, tok0))
             self.remaining[slot] = req.max_new_tokens - 1
             self.last_tok[slot] = tok0
@@ -458,10 +513,33 @@ class SchedEngine(PagedEngine):
                 "tpot_attainment": round(tpot_ok / tpot_n, 4)
                 if tpot_n else None}
 
-    def telemetry(self) -> dict:
-        out = dataclasses.asdict(self.stats)
+    def telemetry(self, since: Optional[dict] = None) -> dict:
+        """Compatibility shim over the metrics registry: the same dict
+        shape the pre-registry code returned, but derived from a
+        registry snapshot — pass ``since=`` (an earlier
+        ``metrics.snapshot()``) to get per-drive deltas instead of
+        lifetime totals (warm-up drives no longer pollute steady-state
+        benchmark rows)."""
+        snap = (self.metrics.snapshot() if since is None
+                else self.metrics.delta(since))
+        c, g = snap["counters"], snap["gauges"]
+        out = {f.name: int(c.get(f"sched_{f.name}_total", 0))
+               for f in dataclasses.fields(self.stats)}
         out["policy"] = self.policy.name
-        out["prefix"] = self.prefix.stats() if self.prefix else None
-        out["sync_count"] = self.sync_count
+        if self.prefix is not None:
+            lookups = int(c.get("prefix_lookups_total", 0))
+            hits = int(c.get("prefix_hits_total", 0))
+            out["prefix"] = {
+                "lookups": lookups,
+                "hits": hits,
+                "hit_rate": round(hits / lookups, 4) if lookups else 0.0,
+                "hit_tokens": int(c.get("prefix_hit_tokens_total", 0)),
+                "cached_pages": int(g.get("prefix_cached_pages", 0)),
+                "inserted": int(c.get("prefix_inserted_total", 0)),
+                "evicted": int(c.get("prefix_evicted_total", 0)),
+            }
+        else:
+            out["prefix"] = None
+        out["sync_count"] = int(c.get("serve_host_syncs_total", 0))
         out["slo"] = self.slo_attainment()
         return out

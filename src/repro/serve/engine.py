@@ -34,8 +34,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import PID_ENGINE, Tracer
 from repro.serve.paged import (PAGE, OutOfPagesError, PageAllocator,
                                scatter_prefill_cache, set_block_table_rows)
+
+
+def _kv_scale_change_count(before, after):
+    """Device-side requant accounting: number of quantized page-scale
+    entries (page, kv_head) whose value differs between two cache
+    pytrees — a changed entry means that page was re-scaled by a write
+    this dispatch (fresh-page reset or an amax-growth requantize).
+    Constant 0 for bf16 pools (no scale leaves).  Pure array math inside
+    the existing jitted dispatch; the count rides the dispatch's output
+    tuple out at the block-boundary sync, costing zero extra host
+    syncs."""
+    from jax.tree_util import keystr, tree_flatten_with_path
+    b = {keystr(p): x for p, x in tree_flatten_with_path(before)[0]
+         if "_scales" in keystr(p)}
+    total = jnp.zeros((), jnp.int32)
+    for p, x in tree_flatten_with_path(after)[0]:
+        k = keystr(p)
+        if k in b:
+            total = total + jnp.sum((b[k] != x).astype(jnp.int32))
+    return total
 
 
 @dataclasses.dataclass
@@ -65,7 +87,8 @@ class _EngineBase:
     """Request intake + slot bookkeeping shared by both engines."""
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
-                 eos_id: int):
+                 eos_id: int, metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.lm = lm
         self.params = params
         self.n_slots = n_slots
@@ -81,6 +104,68 @@ class _EngineBase:
         # separately instead of hiding prefill behind decode throughput
         self.t_prefill_s = 0.0
         self.t_decode_s = 0.0
+        # observability: a per-engine registry (fn-backed over the
+        # accumulators above where one exists) and an off-by-default
+        # tracer; every timestamp below is a host clock the engine
+        # already reads, so instrumentation adds zero device syncs
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        m = self.metrics
+        self._c_submitted = m.counter(
+            "serve_requests_submitted_total", "requests accepted by submit()")
+        self._c_retired = m.counter(
+            "serve_requests_retired_total",
+            "requests finished (incl. admission-time rejects)")
+        self._c_tokens = m.counter(
+            "serve_tokens_emitted_total", "tokens appended across requests")
+        self._h_queue = m.histogram(
+            "serve_queue_wait_seconds", "submit -> first slot grant")
+        self._h_ttft = m.histogram(
+            "serve_ttft_seconds", "submit -> first token")
+        self._h_tpot = m.histogram(
+            "serve_tpot_seconds", "mean per-token latency after the first")
+        m.counter("serve_phase_seconds_total",
+                  "dispatch+sync wall-clock by phase",
+                  fn=lambda: self.t_prefill_s, phase="prefill")
+        m.counter("serve_phase_seconds_total",
+                  fn=lambda: self.t_decode_s, phase="decode")
+        m.gauge("serve_queue_depth", "requests waiting for a slot",
+                fn=lambda: len(self.queue))
+        m.gauge("serve_slots_active", "slots currently decoding",
+                fn=lambda: len(self.active))
+
+    # ------------------------------------------------------------------
+    # observability hooks (host-clock only; no device syncs)
+
+    def _obs_submit(self, req: Request):
+        self._c_submitted.inc()
+        tr = self.tracer
+        if tr.enabled:
+            tr.name_thread(req.rid, f"req {req.rid}")
+            tr.begin("request", req.rid, ts=req.t_submit,
+                     args={"rid": req.rid, "prompt_tokens": len(req.prompt),
+                           "max_new_tokens": req.max_new_tokens})
+            tr.begin("queue", req.rid, ts=req.t_submit)
+
+    def _obs_admit(self, req: Request, now: float, first: bool, **args):
+        if first:
+            self._h_queue.observe(now - req.t_submit)
+        self.tracer.end("queue", req.rid, ts=now, args=args or None)
+
+    def _obs_first(self, req: Request):
+        if req.t_first is not None:
+            self._h_ttft.observe(req.t_first - req.t_submit)
+
+    def _obs_retire(self, req: Request):
+        self._c_retired.inc()
+        if (req.t_done is not None and req.t_first is not None
+                and len(req.out_tokens) > 1):
+            self._h_tpot.observe((req.t_done - req.t_first)
+                                 / (len(req.out_tokens) - 1))
+        self.tracer.end("request", req.rid, ts=req.t_done,
+                        args={"tokens": len(req.out_tokens),
+                              "preemptions": req.preemptions,
+                              "rejected": req.rejected})
 
     def submit(self, prompt, **kw) -> int:
         prompt = np.asarray(prompt, np.int32)
@@ -93,6 +178,7 @@ class _EngineBase:
                       t_submit=time.perf_counter(), **kw)
         self.queue.append(req)
         self.registry[rid] = req
+        self._obs_submit(req)
         return rid
 
     def step(self) -> List[tuple]:
@@ -106,9 +192,9 @@ class _EngineBase:
 
 class Engine(_EngineBase):
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
-                 eos_id: int = -1, seed: int = 0):
+                 eos_id: int = -1, seed: int = 0, metrics=None, tracer=None):
         super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
-                         eos_id=eos_id)
+                         eos_id=eos_id, metrics=metrics, tracer=tracer)
         self.rng = np.random.default_rng(seed)
         self.cache = lm.init_cache(n_slots, max_len)
 
@@ -159,16 +245,23 @@ class Engine(_EngineBase):
                 jnp.int32(slot))
             logits = np.asarray(logits)
             self.t_prefill_s += time.perf_counter() - req.t_admit
+            self._obs_admit(req, req.t_admit, first=True)
             tok = self._sample(logits, req.temperature)
             req.out_tokens.append(tok)
             req.pos = plen
             req.t_first = time.perf_counter()
+            self.tracer.complete("prefill", req.rid, req.t_admit,
+                                 req.t_first, args={"tokens": plen,
+                                                    "emitted": 1})
+            self._obs_first(req)
+            self._c_tokens.inc()
             emitted.append((req.rid, tok))
             if (tok == self.eos or req.max_new_tokens <= 1
                     or req.pos >= self.max_len - 1):
                 req.done = True           # EOS/budget hit on first token
                 req.t_done = req.t_first
                 self.free.append(slot)
+                self._obs_retire(req)
             else:
                 self.active[slot] = req
 
@@ -191,12 +284,21 @@ class Engine(_EngineBase):
             self.params, jnp.asarray(tokens), self.cache,
             jnp.asarray(pos_by_slot))
         logits = np.asarray(logits)
-        self.t_decode_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.t_decode_s += t1 - t0
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("decode_step", 0, t0, t1, pid=PID_ENGINE,
+                        args={"rows": len(self.active)})
 
         for slot, req in list(self.active.items()):
             tok = self._sample(logits[slot], req.temperature)
             req.out_tokens.append(tok)
             req.pos += 1
+            self._c_tokens.inc()
+            if tr.enabled:
+                tr.complete("decode_step", req.rid, t0, t1,
+                            args={"tokens": 1})
             emitted.append((req.rid, tok))
             if (tok == self.eos or
                     len(req.out_tokens) >= req.max_new_tokens or
@@ -205,6 +307,7 @@ class Engine(_EngineBase):
                 req.t_done = time.perf_counter()
                 del self.active[slot]
                 self.free.append(slot)
+                self._obs_retire(req)
         return emitted
 
 
@@ -270,7 +373,7 @@ class PagedEngine(_EngineBase):
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
                  eos_id: int = -1, seed: int = 0, page_size: int = PAGE,
                  decode_block: int = 8, n_pages: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, metrics=None, tracer=None):
         cfg = lm.cfg
         a = cfg.attention
         assert a is not None and a.kind != "mla" and a.window is None \
@@ -291,7 +394,7 @@ class PagedEngine(_EngineBase):
         if cfg_kw:
             lm = type(lm)(cfg.with_(**cfg_kw))
         super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
-                         eos_id=eos_id)
+                         eos_id=eos_id, metrics=metrics, tracer=tracer)
         self.page_size = page_size
         self.decode_block = decode_block
         from repro.kvcache import paged_pool_shape
@@ -316,6 +419,32 @@ class PagedEngine(_EngineBase):
         self.key = jax.random.PRNGKey(seed)
         self.sync_count = 0                      # device->host transitions
         self.steps_dispatched = 0                # decode steps traced+run
+        m = self.metrics
+        m.counter("serve_host_syncs_total", "device->host sync points",
+                  fn=lambda: self.sync_count)
+        m.counter("serve_decode_steps_total",
+                  "decode scan steps dispatched (incl. overrun no-ops)",
+                  fn=lambda: self.steps_dispatched)
+        m.gauge("serve_pages_free", "allocator free pages",
+                fn=lambda: len(self.alloc.free))
+        m.gauge("serve_pages_total", "allocator pool size (incl. null page)",
+                fn=lambda: self.alloc.n_pages)
+        # device-counted step accumulators: summed inside the decode scan,
+        # read out at the one existing block-boundary sync
+        self._c_decode_tokens = m.counter(
+            "serve_decode_tokens_total",
+            "tokens emitted by fused decode blocks (device-counted)")
+        self._c_eos = m.counter(
+            "serve_eos_total", "EOS fires inside decode blocks "
+            "(device-counted)")
+        self._c_requant = m.counter(
+            "serve_kv_requant_events_total",
+            "quantized page-scale entries changed by device KV writes")
+        self._c_prefill_disp = m.counter(
+            "serve_prefill_dispatches_total",
+            "batched prefill / chunk dispatches")
+        self._c_decode_disp = m.counter(
+            "serve_decode_dispatches_total", "fused decode-block dispatches")
 
         # the old cache is dead the moment a dispatch returns — donate it
         # so the page pools aren't double-resident (no-op on CPU)
@@ -353,21 +482,28 @@ class PagedEngine(_EngineBase):
                      remaining, temps, key):
         """``decode_block`` fused decode steps: sample on device, advance
         per-slot lengths/budgets, mask finished slots.  Steps where no
-        slot is active are skipped via lax.cond (block overrun)."""
+        slot is active are skipped via lax.cond (block overrun).  A
+        2-vector of step stats ([tokens emitted, EOS fires]) rides the
+        scan carry, and quantized-page requant events are counted by
+        comparing scale leaves before/after — both read out at the same
+        block-boundary sync, never on their own."""
         eos, max_len = self.eos, self.max_len
 
         def real_step(carry):
-            tokens, lengths, active, remaining, cache, key = carry
+            tokens, lengths, active, remaining, cache, key, stats = carry
             logits, cache = self.lm.decode_step(params, tokens, cache,
                                                 lengths)
             key, sub = jax.random.split(key)
             nxt = _sample_batch(logits, temps, sub)
             nxt = jnp.where(active, nxt, tokens)
+            stats = stats + jnp.stack(
+                [jnp.sum(active.astype(jnp.int32)),
+                 jnp.sum((active & (nxt == eos)).astype(jnp.int32))])
             lengths = jnp.where(active, lengths + 1, lengths)
             remaining = jnp.where(active, remaining - 1, remaining)
             done = (nxt == eos) | (remaining <= 0) | (lengths >= max_len - 1)
             active = active & ~done
-            return (nxt, lengths, active, remaining, cache, key)
+            return (nxt, lengths, active, remaining, cache, key, stats)
 
         def step(carry, _):
             emit = carry[2]                      # active at step start
@@ -375,11 +511,15 @@ class PagedEngine(_EngineBase):
                                  carry)
             return carry, (carry[0], emit)
 
-        carry = (tokens, lengths, active, remaining, cache, key)
+        carry = (tokens, lengths, active, remaining, cache, key,
+                 jnp.zeros((2,), jnp.int32))
         carry, (toks, emits) = jax.lax.scan(step, carry, None,
                                             length=self.decode_block)
-        tokens, lengths, active, remaining, cache, _ = carry
-        return cache, toks, emits, tokens, lengths, active, remaining
+        tokens, lengths, active, remaining, new_cache, _, stats = carry
+        dstats = jnp.concatenate(
+            [stats, _kv_scale_change_count(cache, new_cache)[None]])
+        return (new_cache, toks, emits, tokens, lengths, active, remaining,
+                dstats)
 
     # ------------------------------------------------------------------
     # host loop
@@ -388,6 +528,7 @@ class PagedEngine(_EngineBase):
         req = self.active.pop(slot)
         req.done = True
         req.t_done = now
+        self._obs_retire(req)
         self.alloc.release(slot)                 # zeroes the host bt row
         self.lengths[slot] = 0
         self.temps[slot] = 0.0
@@ -416,6 +557,8 @@ class PagedEngine(_EngineBase):
             self.free.popleft()
             req.slot = slot
             req.t_admit = time.perf_counter()
+            self._obs_admit(req, req.t_admit, first=True,
+                            pages=len(self.alloc.owned(slot)))
             admitted.append(req)
         return admitted
 
@@ -438,13 +581,24 @@ class PagedEngine(_EngineBase):
                 jnp.asarray(self.temps[slot_ids]), sub)
         tok0 = np.asarray(tok0)                  # <- sync (1 per admit batch)
         self.sync_count += 1
-        self.t_prefill_s += time.perf_counter() - t0
         now = time.perf_counter()
+        self.t_prefill_s += now - t0
+        self._c_prefill_disp.inc()
+        self._c_tokens.inc(len(admitted))
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("prefill_dispatch", 0, t0, now, pid=PID_ENGINE,
+                        args={"rows": len(admitted),
+                              "tokens": int(plens.sum())})
         for i, req in enumerate(admitted):
             t = int(tok0[i])
             req.out_tokens.append(t)
             req.pos = int(plens[i])
             req.t_first = now
+            if tr.enabled:
+                tr.complete("prefill", req.rid, t0, now,
+                            args={"tokens": int(plens[i]), "emitted": 1})
+            self._obs_first(req)
             self.active[req.slot] = req
             self.lengths[req.slot] = plens[i]
             self.remaining[req.slot] = req.max_new_tokens - 1
@@ -466,13 +620,30 @@ class PagedEngine(_EngineBase):
                 jnp.asarray(self.lengths), jnp.asarray(active_mask),
                 jnp.asarray(self.remaining), jnp.asarray(self.temps), sub)
         self.cache = out[0]
-        # ONE sync for the whole K-token block (writable host copies):
-        toks, emits, last, lengths, active, remaining = (
+        # ONE sync for the whole K-token block (writable host copies);
+        # the device-counted step stats ride the same tuple out:
+        toks, emits, last, lengths, active, remaining, dstats = (
             np.array(x) for x in out[1:])
         self.sync_count += 1
-        self.t_decode_s += time.perf_counter() - t0
-        self.steps_dispatched += self.decode_block
         now = time.perf_counter()
+        self.t_decode_s += now - t0
+        self.steps_dispatched += self.decode_block
+        self._c_decode_disp.inc()
+        self._c_decode_tokens.inc(int(dstats[0]))
+        self._c_tokens.inc(int(dstats[0]))
+        self._c_eos.inc(int(dstats[1]))
+        self._c_requant.inc(int(dstats[2]))
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("decode_block", 0, t0, now, pid=PID_ENGINE,
+                        args={"rows": len(self.active),
+                              "steps": self.decode_block,
+                              "tokens": int(dstats[0])})
+            for slot, req in self.active.items():
+                n = int(emits[:, slot].sum())
+                if n:
+                    tr.complete("decode_block", req.rid, t0, now,
+                                args={"tokens": n})
         for i in range(self.decode_block):
             for slot in list(self.active):
                 if emits[i, slot]:

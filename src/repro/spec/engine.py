@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import PID_ENGINE
 from repro.sched.policy import EDF
 from repro.sched.scheduler import SchedEngine
 from repro.serve.engine import _pow2_bucket
@@ -184,6 +185,13 @@ class SpecEngine(SchedEngine):
             cfg=lm.cfg)
         self.spec_slack_s = spec_slack_s
         self.spec_stats = SpecStats()
+        # fn-backed registry bridges (SpecStats stays the writer)
+        m = self.metrics
+        for f in dataclasses.fields(SpecStats):
+            m.counter(f"spec_{f.name}_total", f.name.replace("_", " "),
+                      fn=lambda f=f.name: getattr(self.spec_stats, f))
+        m.gauge("spec_arm_info", "1, labelled with the speculation arm",
+                fn=lambda: 1.0, arm=self.spec_arm)
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._verify_jit = jax.jit(self._verify_impl, donate_argnums=donate,
                                    static_argnames=("max_pages",))
@@ -209,7 +217,7 @@ class SpecEngine(SchedEngine):
         y, n_emit, n_match = spec_accept(logits, fed, widths, active,
                                          temps, remaining, lengths,
                                          self.eos, self.max_len, key)
-        cache = commit_spec_cache(cache, stage, lengths, n_emit)
+        new_cache = commit_spec_cache(cache, stage, lengths, n_emit)
         new_lengths = lengths + n_emit
         new_remaining = remaining - n_emit
         idx = jnp.maximum(n_emit - 1, 0)
@@ -218,8 +226,12 @@ class SpecEngine(SchedEngine):
         done = (last == self.eos) | (new_remaining <= 0) \
             | (new_lengths >= self.max_len - 1)
         new_active = active & ~done
-        return (cache, y, n_emit, n_match, last, new_lengths, new_active,
-                new_remaining)
+        # requant accounting rides the round's output tuple out at the
+        # one existing sync (see serve.engine._kv_scale_change_count)
+        from repro.serve.engine import _kv_scale_change_count
+        nrq = _kv_scale_change_count(cache, new_cache)
+        return (new_cache, y, n_emit, n_match, last, new_lengths,
+                new_active, new_remaining, nrq)
 
     # ------------------------------------------------------------------
     # host loop
@@ -269,8 +281,8 @@ class SpecEngine(SchedEngine):
             hist = np.concatenate([np.asarray(req.prompt, np.int32),
                                    np.asarray(req.out_tokens, np.int32)])
             batch.append((slot, req.rid, hist, k))
-        t0 = time.perf_counter()
-        with self._mesh_ctx():
+        t_round0 = t0 = time.perf_counter()   # spec_round span covers
+        with self._mesh_ctx():                # draft + verify + commit
             proposals = self.drafter.propose_batch(batch, self.k_max)
         # drafting is decode-phase work (the draft-LM arm is a real
         # dispatch + sync): charge it, or the benchmark's phase split
@@ -319,14 +331,22 @@ class SpecEngine(SchedEngine):
                 jnp.asarray(active_mask), jnp.asarray(self.remaining),
                 jnp.asarray(self.temps), sub, max_pages=mp)
         self.cache = out[0]
-        y, n_emit, n_match, last, lengths, active, remaining = (
+        y, n_emit, n_match, last, lengths, active, remaining, nrq = (
             np.array(x) for x in out[1:])
         self.sync_count += 1
-        self.t_decode_s += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.t_decode_s += now - t0
         self.spec_stats.verify_steps += 1
+        self._c_requant.inc(int(nrq))
+        self._c_tokens.inc(int(n_emit.sum()))
         self.lengths, self.last_tok, self.remaining = (lengths, last,
                                                        remaining)
-        now = time.perf_counter()
+        tr = self.tracer
+        if tr.enabled:
+            tr.complete("spec_round", 0, t_round0, now, pid=PID_ENGINE,
+                        args={"rows": len(reqs),
+                              "proposed": int(ndraft.sum()),
+                              "tokens": int(n_emit.sum())})
         for slot, req in reqs:
             ne = int(n_emit[slot])
             for t in y[slot, :ne]:
@@ -337,9 +357,13 @@ class SpecEngine(SchedEngine):
                                    int(n_match[slot]))
             self.spec_stats.slot_steps += 1
             self.spec_stats.drafts_proposed += int(ndraft[slot])
-            self.spec_stats.drafts_accepted += min(int(n_match[slot]),
-                                                   max(ne - 1, 0))
+            acc = min(int(n_match[slot]), max(ne - 1, 0))
+            self.spec_stats.drafts_accepted += acc
             self.spec_stats.spec_tokens += ne
+            if tr.enabled:
+                tr.complete("spec_round", req.rid, t_round0, now,
+                            args={"proposed": int(ndraft[slot]),
+                                  "accepted": acc, "tokens": ne})
         for slot, _req in reqs:
             if not active[slot]:
                 self._retire(slot, now)
@@ -349,26 +373,27 @@ class SpecEngine(SchedEngine):
         super()._retire(slot, now)
 
     # ------------------------------------------------------------------
-    def telemetry(self) -> dict:
-        out = super().telemetry()
-        st = dataclasses.asdict(self.spec_stats)
+    def telemetry(self, since=None) -> dict:
+        out = super().telemetry(since)
+        snap = (self.metrics.snapshot() if since is None
+                else self.metrics.delta(since))
+        c = snap["counters"]
+        st = {f.name: int(c.get(f"spec_{f.name}_total", 0))
+              for f in dataclasses.fields(SpecStats)}
         st["arm"] = self.spec_arm
         st["k_max"] = self.k_max
         st["acceptance_rate"] = (
-            round(self.spec_stats.drafts_accepted
-                  / self.spec_stats.drafts_proposed, 4)
-            if self.spec_stats.drafts_proposed else None)
+            round(st["drafts_accepted"] / st["drafts_proposed"], 4)
+            if st["drafts_proposed"] else None)
         # per SLOT-step means: the baseline decode loop emits exactly 1
         # token per active slot per step, so tokens_per_step > 1 is the
         # decode-step reduction speculation bought
         st["accepted_per_step"] = (
-            round(self.spec_stats.drafts_accepted
-                  / self.spec_stats.slot_steps, 3)
-            if self.spec_stats.slot_steps else None)
+            round(st["drafts_accepted"] / st["slot_steps"], 3)
+            if st["slot_steps"] else None)
         st["tokens_per_step"] = (
-            round(self.spec_stats.spec_tokens
-                  / self.spec_stats.slot_steps, 3)
-            if self.spec_stats.slot_steps else None)
+            round(st["spec_tokens"] / st["slot_steps"], 3)
+            if st["slot_steps"] else None)
         st["controller"] = self.controller.stats()
         out["spec"] = st
         return out

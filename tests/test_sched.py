@@ -408,6 +408,35 @@ def test_sched_fcfs_cold_matches_paged_engine_and_sync_count():
     assert all(sdone[i].t_admit is not None for i in sids)
 
 
+def test_sched_tracing_is_sync_free_even_under_preemption():
+    """Scheduler instrumentation (chunk spans, preempt instants,
+    readmit queue spans) must not change sync_count or the greedy
+    streams — audited on the preemption-forcing tight pool, the
+    scheduler's most trace-dense path."""
+    from repro.obs import Tracer
+    lm, params, rng = _setup()
+    prompts = [rng.integers(0, lm.cfg.vocab_size, (8,)).tolist(),
+               rng.integers(0, lm.cfg.vocab_size, (5,)).tolist()]
+
+    def run(tracer=None):
+        eng = _sched(lm, params, policy="fcfs", prefix_cache=False,
+                     prefill_chunk=8, max_len=48, n_pages=7,
+                     tracer=tracer)
+        ids = [eng.submit(p, max_new_tokens=20) for p in prompts]
+        done = eng.run_to_completion()
+        return [done[i].out_tokens for i in ids], eng
+
+    base_toks, base = run()
+    tr = Tracer(enabled=True)
+    toks, traced = run(tracer=tr)
+    assert base.stats.preemptions > 0
+    assert toks == base_toks
+    assert traced.sync_count == base.sync_count
+    assert traced.stats.preemptions == base.stats.preemptions
+    assert any(e.get("ph") == "i" and e["name"] == "preempt"
+               for e in tr.events)
+
+
 @pytest.mark.parametrize("kv_dtype", [None, "int8"])
 def test_shared_prefix_warm_matches_cold(kv_dtype):
     """Prefix-cache admissions skip the shared prompt pages yet stay

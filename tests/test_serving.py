@@ -196,6 +196,34 @@ def test_paged_engine_syncs_per_block_not_per_token():
         f"{peng.sync_count} syncs for {n_tok} tokens"
 
 
+def test_tracing_and_metrics_are_sync_free():
+    """The obs layer's structural guarantee: an enabled tracer reuses
+    host timestamps the engine already takes and the decode-loop device
+    stats are carried through the existing scan either way — so the
+    traced run performs EXACTLY the same device->host syncs and emits
+    bit-identical greedy streams as the default run."""
+    from repro.obs import Tracer
+    from repro.obs.trace import request_span_trees
+    from repro.serve.engine import PagedEngine
+    lm, params, prompts = _serving_setup()
+
+    def run(tracer=None):
+        peng = PagedEngine(lm, params, n_slots=2, max_len=64, seed=0,
+                           page_size=8, decode_block=4, tracer=tracer)
+        ids = [peng.submit(p, max_new_tokens=9) for p in prompts]
+        done = peng.run_to_completion()
+        return [done[i].out_tokens for i in ids], peng.sync_count
+
+    base_toks, base_syncs = run()
+    tr = Tracer(enabled=True)
+    toks, syncs = run(tracer=tr)
+    assert toks == base_toks
+    assert syncs == base_syncs
+    trees = request_span_trees(tr.to_json())
+    assert len(trees) == len(prompts)
+    assert all(t["complete"] for t in trees.values())
+
+
 def test_paged_engine_eos_and_page_reuse():
     """EOS mid-block retires the slot, frees its pages, and the reused
     pages serve later requests correctly."""
