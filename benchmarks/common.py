@@ -200,12 +200,31 @@ def method_rows(model: str, tasks, *, seed=0) -> dict:
 # Shared measurement helpers (serving benchmarks)
 
 
+QUANTILES = (0.5, 0.95, 0.99)
+
+
 def percentiles(xs, *, scale=1e3, digits=3) -> dict:
-    """p50/p99 of ``xs`` (seconds by default, reported in ms)."""
+    """p50/p95/p99 of raw samples ``xs`` (seconds by default, in ms).
+    Fallback for values no engine histogram records — engine latency
+    percentiles go through :func:`hist_percentiles` instead."""
     if not xs:
-        return {"p50": None, "p99": None}
-    return {"p50": round(float(np.percentile(xs, 50)) * scale, digits),
-            "p99": round(float(np.percentile(xs, 99)) * scale, digits)}
+        return {f"p{q * 100:g}": None for q in QUANTILES}
+    return {f"p{q * 100:g}": round(float(np.percentile(xs, q * 100))
+                                   * scale, digits)
+            for q in QUANTILES}
+
+
+def hist_percentiles(hist, *, scale=1e3, digits=3) -> dict:
+    """p50/p95/p99 out of a registry histogram snapshot/delta dict
+    (``{"buckets": cumulative, "sum": ..., "count": ...}``) — the same
+    bucket-interpolation the Prometheus exposition uses
+    (:func:`repro.obs.metrics.histogram_quantile`), so benchmark
+    artifacts and scraped quantiles agree by construction."""
+    from repro.obs.metrics import histogram_quantiles
+    if hist is None or hist["count"] <= 0:
+        return {f"p{q * 100:g}": None for q in QUANTILES}
+    return {k: round(v * scale, digits)
+            for k, v in histogram_quantiles(hist, qs=QUANTILES).items()}
 
 
 def interleaved_median_drives(engines: dict, drive, reps: int, key) -> dict:

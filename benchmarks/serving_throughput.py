@@ -38,6 +38,13 @@ JSON artifact (default ``experiments/bench/BENCH_serving_throughput.json``):
   split (weight-stream vs KV bytes) at the full arch size — the
   weight-bytes ratio is the tracked >= 1.9x claim.  CI writes this to
   ``BENCH_w8a8_decode.json``.
+* ``costmodel_calibration`` (``--calibration-bench``) — profiled
+  warmed-up drives through all three engines (repro.obs.profile), every
+  dispatch sample fed prequentially into ``CalibratedCostModel``:
+  median relative error of per-dispatch service-time predictions,
+  uncalibrated analytic vs online-calibrated (the tracked >= 2x
+  reduction), per-kind breakdown, and the fitted correction factors.
+  Also written standalone to ``BENCH_costmodel_calibration.json``.
 * ``spec_decoding`` (``--spec ngram|draft``) — SpecEngine vs the
   non-speculative scheduler on the same trace: measured draft
   acceptance rate, accepted drafts and tokens per slot-step, verify /
@@ -55,6 +62,9 @@ Latency accounting: TTFT is measured from ``submit()`` (arrival), NOT
 from admission — under load the queue wait is the scheduler's doing and
 hiding it would make every policy look alike; queue wait is additionally
 reported as its own row so policies can be compared on ordering alone.
+All p50/p95/p99 come from the engines' own registry histograms
+(bucket-interpolated exactly like the Prometheus exposition), so the
+artifact and a scraped dashboard agree by construction.
 
 ``--arrival-rate R`` switches the trace to open-loop Poisson arrivals
 (exponential interarrival times at R req/s, one shared schedule across
@@ -81,7 +91,8 @@ import numpy as np
 OUT_DEFAULT = (pathlib.Path(__file__).resolve().parent.parent
                / "experiments" / "bench" / "BENCH_serving_throughput.json")
 
-from common import interleaved_median_drives, percentiles as _percentiles  # noqa: E402
+from common import (hist_percentiles as _hist_percentiles,  # noqa: E402
+                    interleaved_median_drives)
 
 
 def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
@@ -106,33 +117,35 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
     dt = time.perf_counter() - t0
 
     n_tok = sum(len(done[i].out_tokens) for i in ids)
-    ttft, tpot, qwait = [], [], []
     met_both_tokens = 0
     n_ttft_ok = n_tpot_ok = 0
     for i in ids:
         r = done[i]
         r_ttft = r.t_first - r.t_submit
-        ttft.append(r_ttft)
-        if r.t_admit is not None:
-            qwait.append(r.t_admit - r.t_submit)
         r_tpot = None
         if len(r.out_tokens) > 1 and r.t_done is not None:
             r_tpot = (r.t_done - r.t_first) / (len(r.out_tokens) - 1)
-            tpot.append(r_tpot)
         ttft_ok = slo_ttft_s is None or r_ttft <= slo_ttft_s
         tpot_ok = slo_tpot_s is None or r_tpot is None or r_tpot <= slo_tpot_s
         n_ttft_ok += ttft_ok
         n_tpot_ok += tpot_ok
         if ttft_ok and tpot_ok:
             met_both_tokens += len(r.out_tokens)
+    # latency percentiles come from the registry's histogram delta (the
+    # engines already observe TTFT/TPOT/queue-wait there), interpolated
+    # exactly like the Prometheus exposition — one percentile code path
+    # for benchmark artifacts and scraped metrics
+    dlt = eng.metrics.delta(snap0)
+    hists = dlt["histograms"]
     row = {
         "requests": len(ids),
         "tokens": n_tok,
         "wall_s": round(dt, 3),
         "tokens_per_sec": round(n_tok / dt, 2),
-        "ttft_ms": _percentiles(ttft),
-        "queue_wait_ms": _percentiles(qwait),
-        "tpot_ms": _percentiles(tpot),
+        "ttft_ms": _hist_percentiles(hists.get("serve_ttft_seconds")),
+        "queue_wait_ms": _hist_percentiles(
+            hists.get("serve_queue_wait_seconds")),
+        "tpot_ms": _hist_percentiles(hists.get("serve_tpot_seconds")),
     }
     if slo_ttft_s is not None or slo_tpot_s is not None:
         if hasattr(eng, "slo_attainment"):
@@ -148,9 +161,9 @@ def run_engine(eng, prompts, max_new, temperature, *, arrivals=None,
             **att,
             "goodput_tokens_per_sec": round(met_both_tokens / dt, 2),
         }
-    # the metrics registry is the one read surface: everything below is
-    # this drive's delta (repro.obs.metrics), not engine lifetime totals
-    c = eng.metrics.delta(snap0)["counters"]
+    # the metrics registry is the one read surface: everything above and
+    # below is this drive's delta, not engine lifetime totals
+    c = dlt["counters"]
     if hasattr(eng, "sync_count"):
         syncs = int(c.get("serve_host_syncs_total", 0))
         row["host_syncs"] = syncs
@@ -286,6 +299,14 @@ def main(argv=None):
     ap.add_argument("--repetitive", type=int, default=0,
                     help="build prompts by tiling an N-token pattern "
                          "(the workload where n-gram drafting wins)")
+    ap.add_argument("--calibration-bench", action="store_true",
+                    help="profile warmed-up drives through all three "
+                         "engines and fit CalibratedCostModel online: "
+                         "median relative error of per-dispatch service-"
+                         "time predictions, uncalibrated analytic vs "
+                         "calibrated (tracked >= 2x reduction) -> "
+                         "'costmodel_calibration' section + "
+                         "BENCH_costmodel_calibration.json")
     ap.add_argument("--slo-ttft", type=float, default=2000.0,
                     help="TTFT SLO target, ms (tier-relative)")
     ap.add_argument("--slo-tpot", type=float, default=500.0,
@@ -586,6 +607,85 @@ def main(argv=None):
               f"accepted/step  {sp['tokens_per_step']} tok/step  tpot "
               f"{sp['baseline_tpot_ms_p50']} -> {sp['spec_tpot_ms_p50']} "
               f"ms  token-identical: {sp['token_identical']}")
+
+    # ---- cost-model calibration: measured-vs-predicted dispatch drift ---
+    # (the profiling layer's acceptance claim: warmed-up profiled drives
+    # through all three engines, every dispatch sample fed prequentially
+    # into CalibratedCostModel — each sample is predicted with the
+    # corrections fit BEFORE it, then folded in — and the online
+    # corrections must cut the median relative error of per-dispatch
+    # service-time predictions by >= 2x vs the uncalibrated analytic
+    # model.  On CPU the analytic TPU predictions are off by orders of
+    # magnitude, which is exactly the point: the correction factors ARE
+    # the portable layer.)
+    if args.calibration_bench:
+        from repro.core.costmodel import CalibratedCostModel
+        from repro.obs import DispatchProfiler
+        from repro.sched import SchedEngine
+        from repro.spec import SpecEngine
+
+        def profiled_drive(build):
+            prof = DispatchProfiler(enabled=False)
+            eng = build(prof)
+            run_engine(eng, prompts, args.max_new, args.temperature,
+                       arrivals=arrivals)   # warm-up: compile every shape
+            prof.enabled = True             # measured drive only
+            run_engine(eng, prompts, args.max_new, args.temperature,
+                       arrivals=arrivals)
+            return prof
+
+        ckw = dict(n_slots=args.slots, max_len=args.max_len,
+                   seed=args.seed, page_size=args.page_size,
+                   decode_block=args.decode_block)
+        profs = {
+            "paged": profiled_drive(lambda p: PagedEngine(
+                lm_paged, params, profiler=p, **ckw)),
+            "sched": profiled_drive(lambda p: SchedEngine(
+                lm_paged, params, policy="fcfs", prefix_cache=True,
+                prefill_chunk=args.prefill_chunk, profiler=p, **ckw)),
+            "spec": profiled_drive(lambda p: SpecEngine(
+                lm_paged, params, spec="ngram", draft_k=args.draft_k,
+                prefill_chunk=args.prefill_chunk, profiler=p, **ckw)),
+        }
+        calib = CalibratedCostModel()
+        records = []
+        for name, prof in profs.items():
+            for r in calib.fit_profile(prof, lm_paged.cfg):
+                records.append({**r, "engine": name})
+
+        def med_rel_err(rows, key):
+            return float(np.median([abs(r[key] - r["measured_s"])
+                                    / max(r["measured_s"], 1e-12)
+                                    for r in rows]))
+
+        by_kind = {}
+        for r in records:
+            by_kind.setdefault(r["kind"], []).append(r)
+        err_raw = med_rel_err(records, "predicted_s")
+        err_cal = med_rel_err(records, "calibrated_s")
+        section = {
+            "samples": len(records),
+            "samples_by_kind": {k: len(v) for k, v in sorted(
+                by_kind.items())},
+            "series": len(calib.factors),
+            "median_rel_err_uncalibrated": round(err_raw, 4),
+            "median_rel_err_calibrated": round(err_cal, 4),
+            "error_reduction_x": round(err_raw / max(err_cal, 1e-12), 2),
+            "by_kind": {k: {
+                "uncalibrated": round(med_rel_err(v, "predicted_s"), 4),
+                "calibrated": round(med_rel_err(v, "calibrated_s"), 4),
+            } for k, v in sorted(by_kind.items())},
+            "calibration": calib.to_json(),
+        }
+        results["costmodel_calibration"] = section
+        calib_out = args.out.parent / "BENCH_costmodel_calibration.json"
+        calib_out.parent.mkdir(parents=True, exist_ok=True)
+        calib_out.write_text(json.dumps(section, indent=1))
+        print(f"[bench] calib : {section['samples']} dispatches over "
+              f"{section['series']} (kind x arm) series, median rel err "
+              f"{err_raw:.3f} -> {err_cal:.3f} "
+              f"({section['error_reduction_x']}x reduction) -> "
+              f"{calib_out}")
 
     # ---- quantized weight streaming: fused kernels vs ref vs bf16 -------
     # (same trace through PagedEngine; each arm gets a warm-up drive so

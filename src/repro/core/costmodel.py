@@ -18,6 +18,7 @@ container.
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Dict
 
@@ -270,7 +271,8 @@ def quant_decode_scale(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
 def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
             prompt: int = 512, gen: int = 128, batch: int = 1,
             spec_accept_rate: float = None,
-            prefill_chunk: int = None) -> Dict[str, float]:
+            prefill_chunk: int = None,
+            calibration: "CalibratedCostModel" = None) -> Dict[str, float]:
     cfg = apply_efficiency_config(cfg_base, eff)
     chips = tier.chips
     peak = _peak_flops(cfg)
@@ -317,6 +319,14 @@ def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
         t_round = t_ver + k * SPEC_DRAFT_COST.get(spec, 0.05) * t_dec
         t_dec = t_round / spec_tokens_per_step(a, k)
 
+    # ---- measured calibration (repro.obs.profile feedback loop) ----------
+    # multiplicative per-phase corrections fit online from profiled
+    # dispatches; the analytic rooflines keep the *structure*, measurement
+    # sets the level (EMA over log-ratio measured/predicted).
+    if calibration is not None:
+        t_prefill *= calibration.phase_scale("prefill")
+        t_dec *= calibration.phase_scale("decode")
+
     latency = (t_prefill + gen * t_dec) * 1e3                    # ms
 
     # ---- memory high-water -------------------------------------------------
@@ -337,3 +347,196 @@ def predict(cfg_base: ModelConfig, eff: EfficiencyConfig, tier: HwTier, *,
             "energy_j": energy, "power_w": power,
             "feasible": feasible,
             "flops_prefill": fl_prefill, "bytes_decode": by_dec}
+
+
+# ---------------------------------------------------------------------------
+# Per-dispatch estimates + online calibration (repro.obs.profile loop)
+
+
+# dispatch kinds -> the predict()/service_estimate() phase their
+# corrections feed back into
+PHASE_KINDS = {"prefill": ("admit", "prefill_chunk"),
+               "decode": ("decode_block", "spec_round", "draft_propose")}
+
+
+def dispatch_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
+                      kind: str, tokens: int = 0, rows: int = 1,
+                      steps: int = 1, bucket: int = 0,
+                      ctx: int = 0) -> float:
+    """Analytic seconds for ONE engine dispatch of the given kind — the
+    per-dispatch granularity of :func:`service_estimate`, shaped to what
+    a :class:`repro.obs.profile.ProfileSample` carries so measured and
+    predicted service times compare one-to-one.
+
+    * ``admit`` / ``prefill_chunk``: batched prefill of ``tokens`` real
+      tokens (weights read once, KV written once, chunk continuations
+      additionally stream their live prefix).
+    * ``decode_block``: ``steps`` fused decode steps over ``rows``
+      active slots at context ``ctx``.
+    * ``spec_round``: one multi-query verify of width ``bucket`` —
+      (k+1)× the decode FLOPs at the same HBM bytes.
+    * ``draft_propose``: ``bucket`` draft tokens per row at the modeled
+      per-token draft cost fraction.
+    """
+    awbytes = _active_weight_bytes(cfg)
+    kv_tok = _kv_bytes_per_token(cfg)
+    rows = max(int(rows), 1)
+    ctx = max(int(ctx), int(bucket), 1)
+    if kind in ("admit", "prefill_chunk"):
+        t = max(int(tokens), 1)
+        flops = t * _flops_per_token(cfg, max(ctx // 2, 1))
+        hbm = awbytes + t * kv_tok
+        if kind == "prefill_chunk":
+            # continuation chunks stream the live prefix from the pages
+            hbm += rows * ctx * kv_tok
+        return _roofline_s(cfg, tier, flops, hbm)
+    # decode-shaped dispatches share the per-step roofline
+    fl_step = rows * _flops_per_token(cfg, ctx)
+    by_step = awbytes + rows * ctx * kv_tok
+    t_step = _roofline_s(cfg, tier, fl_step, by_step) \
+        + _decode_collective_s(cfg, tier, rows)
+    if kind == "decode_block":
+        return max(int(steps), 1) * t_step
+    if kind == "spec_round":
+        width = max(int(bucket), 1)
+        t_ver = _roofline_s(cfg, tier, width * fl_step, by_step) \
+            + _decode_collective_s(cfg, tier, rows)
+        return t_ver
+    if kind == "draft_propose":
+        # a draft dispatch happened, so spec_decode="none" on the config
+        # just means the engine was built with an explicit drafter —
+        # fall back to the cheapest modeled drafter, never 0 (a zero
+        # prediction is uncalibratable: no factor can scale it)
+        spec = getattr(cfg, "spec_decode", "none")
+        frac = SPEC_DRAFT_COST.get(spec, 0.05) or SPEC_DRAFT_COST["ngram"]
+        k = max(int(bucket), 1)
+        return k * frac * t_step
+    raise ValueError(f"unknown dispatch kind {kind!r}")
+
+
+class CalibratedCostModel:
+    """Online measured-vs-predicted correction factors per
+    (dispatch-kind × config-arm).
+
+    Each profiled dispatch contributes ``log(measured / predicted)``
+    into an EMA per ``(kind, arm)`` series; ``correction()`` returns
+    ``exp(EMA)`` with a kind-level (sample-weighted) fallback for arms
+    never profiled, and :meth:`phase_scale` folds the kind corrections
+    back into :func:`predict`'s prefill/decode phase times — closing the
+    loop the NSGA-II search ranks with.  JSON round-trips via
+    :meth:`to_json` / :meth:`from_json` (the ``--calibration-out`` /
+    ``--calibration-in`` artifact)."""
+
+    def __init__(self, *, beta: float = 0.25):
+        self.beta = float(beta)
+        # (kind, arm) -> {"log_ratio": EMA, "n": samples}
+        self.factors: Dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------
+    def update(self, kind: str, arm: str, measured_s: float,
+               predicted_s: float) -> float:
+        r = math.log(max(measured_s, 1e-12) / max(predicted_s, 1e-12))
+        st = self.factors.get((kind, arm))
+        if st is None:
+            st = self.factors[(kind, arm)] = {"log_ratio": r, "n": 0}
+        else:
+            st["log_ratio"] = (1.0 - self.beta) * st["log_ratio"] \
+                + self.beta * r
+        st["n"] += 1
+        return r
+
+    def correction(self, kind: str, arm: str = None) -> float:
+        """Multiplicative fix-up for an analytic per-dispatch estimate:
+        exact (kind, arm) series if fit, else the kind-level
+        sample-weighted mean, else 1.0 (uncalibrated)."""
+        if arm is not None and (kind, arm) in self.factors:
+            return math.exp(self.factors[(kind, arm)]["log_ratio"])
+        num = den = 0.0
+        for (k, _), st in self.factors.items():
+            if k == kind:
+                num += st["log_ratio"] * st["n"]
+                den += st["n"]
+        return math.exp(num / den) if den else 1.0
+
+    def calibrate(self, kind: str, predicted_s: float,
+                  arm: str = None) -> float:
+        return predicted_s * self.correction(kind, arm)
+
+    def phase_scale(self, phase: str) -> float:
+        """exp of the sample-weighted mean log-ratio over the phase's
+        dispatch kinds (1.0 when nothing was profiled)."""
+        kinds = PHASE_KINDS.get(phase, ())
+        num = den = 0.0
+        for (k, _), st in self.factors.items():
+            if k in kinds:
+                num += st["log_ratio"] * st["n"]
+                den += st["n"]
+        return math.exp(num / den) if den else 1.0
+
+    @property
+    def n_samples(self) -> int:
+        return sum(st["n"] for st in self.factors.values())
+
+    # ------------------------------------------------------------------
+    def fit_profile(self, profiler, cfg: ModelConfig,
+                    tier: HwTier = TIERS["v5e-1"]) -> list:
+        """Fold a :class:`~repro.obs.profile.DispatchProfiler`'s samples
+        in, *prequentially*: each sample is first predicted with the
+        corrections fit so far (what an online controller would have
+        used), then folded into the EMA.  Returns one record per sample
+        with measured / analytic / calibrated seconds — the drift-report
+        rows ``benchmarks/serving_throughput.py`` aggregates."""
+        records = []
+        for s in profiler.samples:
+            pred = dispatch_estimate(cfg, tier, kind=s.kind,
+                                     tokens=s.tokens, rows=s.rows,
+                                     steps=s.steps, bucket=s.bucket,
+                                     ctx=s.ctx)
+            cal = self.calibrate(s.kind, pred, s.arm)
+            self.update(s.kind, s.arm, s.dur_s, pred)
+            records.append({"kind": s.kind, "arm": s.arm,
+                            "measured_s": s.dur_s, "predicted_s": pred,
+                            "calibrated_s": cal})
+        return records
+
+    # ------------------------------------------------------------------
+    def register_metrics(self, registry) -> None:
+        """Export ``costmodel_drift_ratio{kind=,arm=}`` (measured over
+        predicted; 1.0 = the analytic model is exact) and the per-series
+        sample counts through the PR 8 registry."""
+        g_drift = registry.gauge(
+            "costmodel_drift_ratio",
+            "measured/predicted dispatch service time (EMA of log-ratio)")
+        g_n = registry.gauge(
+            "costmodel_calibration_samples",
+            "profiled dispatches folded into each calibration series")
+        for (kind, arm), st in self.factors.items():
+            g_drift.set(math.exp(st["log_ratio"]), kind=kind, arm=arm)
+            g_n.set(st["n"], kind=kind, arm=arm)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        return {"beta": self.beta,
+                "factors": [{"kind": k, "arm": a,
+                             "log_ratio": st["log_ratio"], "n": st["n"]}
+                            for (k, a), st in sorted(self.factors.items())]}
+
+    @classmethod
+    def from_json(cls, blob: dict) -> "CalibratedCostModel":
+        m = cls(beta=blob.get("beta", 0.25))
+        for f in blob.get("factors", []):
+            m.factors[(f["kind"], f["arm"])] = {
+                "log_ratio": float(f["log_ratio"]), "n": int(f["n"])}
+        return m
+
+    def save(self, path) -> None:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path) -> "CalibratedCostModel":
+        import json
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+

@@ -99,7 +99,7 @@ def accuracy_model(cfg: ModelConfig, eff: EfficiencyConfig, task: TaskSpec,
 class Evaluator:
     def __init__(self, cfg: ModelConfig, task: TaskSpec, tier: HwTier, *,
                  mode: str = "analytic", base_acc: float = 65.0,
-                 proxy_steps: int = 60, seed: int = 0):
+                 proxy_steps: int = 60, seed: int = 0, calibration=None):
         self.cfg = cfg
         self.task = task
         self.tier = tier
@@ -107,12 +107,17 @@ class Evaluator:
         self.base_acc = base_acc
         self.proxy_steps = proxy_steps
         self.seed = seed
+        # measured-dispatch correction factors (CalibratedCostModel, fit
+        # from repro.obs.profile samples): every latency/energy objective
+        # this evaluator produces is scaled by the profiled drift
+        self.calibration = calibration
         self._proxy_cache: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
     def evaluate(self, eff: EfficiencyConfig) -> np.ndarray:
         cost = predict(self.cfg, eff, self.tier,
-                       prompt=min(self.task.seq_len, 512), gen=128)
+                       prompt=min(self.task.seq_len, 512), gen=128,
+                       calibration=self.calibration)
         if self.mode == "proxy":
             acc = self._proxy_accuracy(eff)
         else:

@@ -148,6 +148,10 @@ class SurrogateEnsemble:
         self.seed = seed
         self.gbt_kw = gbt_kw
         self.members: List[GradientBoostedTrees] = []
+        # additive output offset (log-space objectives: a multiplicative
+        # recalibration) — set by AutoTuner.recalibrate when measured
+        # profile corrections arrive after this ensemble was fit
+        self.offset = 0.0
 
     def fit(self, x, y):
         x = np.asarray(x, np.float64)
@@ -163,7 +167,16 @@ class SurrogateEnsemble:
 
     def predict(self, x):
         preds = np.stack([m.predict(x) for m in self.members])
-        return preds.mean(0), preds.std(0)
+        return preds.mean(0) + self.offset, preds.std(0)
+
+    def shift(self, delta: float):
+        """Recalibrate the ensemble's level without a refit: add
+        ``delta`` to every mean prediction.  For objectives fit in log
+        space this is an exact multiplicative correction — how measured
+        cost-model drift (CalibratedCostModel) re-ranks a front whose
+        surrogates were trained on uncalibrated analytic evals."""
+        self.offset += float(delta)
+        return self
 
     def update(self, x_new, y_new, x_all, y_all):
         """Refit on the extended dataset (Algorithm 1 line 6)."""

@@ -39,8 +39,11 @@ class AutoTuner:
     def __init__(self, evaluator: Evaluator, *, mask: Optional[SpaceMask] = None,
                  n0: int = 96, refine_iters: int = 3, k_per_iter: int = 12,
                  pop_size: int = 64, generations: int = 25, seed: int = 0,
-                 ensemble_k: int = 4, log_fn=lambda *a: None):
+                 ensemble_k: int = 4, calibration=None,
+                 log_fn=lambda *a: None):
         self.ev = evaluator
+        if calibration is not None:
+            self.ev.calibration = calibration
         self.mask = mask if mask is not None else \
             space_for_family(evaluator.cfg.family)
         self.n0 = n0
@@ -89,6 +92,33 @@ class AutoTuner:
                 means[:, i] = mu
                 stds[:, i] = sd
         return means, stds
+
+    def recalibrate(self, calibration) -> dict:
+        """Fold measured dispatch-profile corrections into an already-fit
+        tuner.  The analytic cost model is re-queried at the default arm
+        with and without the calibration, and the resulting log-shift for
+        latency/energy is pushed into those surrogates' output offsets —
+        a level correction, exact for objectives fit in log space.  The
+        evaluator keeps the calibration so every future real eval (and
+        refit) is calibrated at the source."""
+        from repro.core.costmodel import predict
+        eff = EfficiencyConfig.default()
+        kw = dict(prompt=min(self.ev.task.seq_len, 512), gen=128)
+        old = predict(self.ev.cfg, eff, self.ev.tier,
+                      calibration=self.ev.calibration, **kw)
+        new = predict(self.ev.cfg, eff, self.ev.tier,
+                      calibration=calibration, **kw)
+        shifts = {}
+        for name, key in (("lat", "latency_ms"), ("energy", "energy_j")):
+            delta = float(np.log(max(new[key], 1e-9))
+                          - np.log(max(old[key], 1e-9)))
+            shifts[name] = delta
+            if name in self.surrogates:
+                self.surrogates[name].shift(delta)
+        self.ev.calibration = calibration
+        self.log(f"[tuner] recalibrated: lat shift {shifts['lat']:+.3f}, "
+                 f"energy shift {shifts['energy']:+.3f} (log-space)")
+        return shifts
 
     # ------------------------------------------------------------------
     def run(self) -> TunerReport:

@@ -144,6 +144,21 @@ def main(argv=None):
                     help="record per-request lifecycle spans and write "
                          "Chrome/Perfetto trace-event JSON here (open in "
                          "ui.perfetto.dev); adds zero host syncs")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-dispatch device-time profiling "
+                         "(repro.obs.profile): attribute measured "
+                         "wall-clock to every admit / prefill-chunk / "
+                         "decode-block / spec-round dispatch by config "
+                         "arm and fold drift + roofline-attainment "
+                         "gauges into --metrics; adds zero host syncs")
+    ap.add_argument("--calibration-out", default=None, metavar="PATH",
+                    help="fit a CalibratedCostModel from the profiled "
+                         "dispatches (implies --profile) and write the "
+                         "JSON calibration artifact here")
+    ap.add_argument("--calibration-in", default=None, metavar="PATH",
+                    help="seed the calibration from a previous "
+                         "--calibration-out artifact (corrections keep "
+                         "updating online from this drive's samples)")
     args = ap.parse_args(argv)
 
     from repro.kvcache import normalize_dtype
@@ -174,12 +189,15 @@ def main(argv=None):
         print(f"[serve] weights quantized to {args.quant} "
               f"({args.quant_impl} matmuls)")
 
-    from repro.obs import Tracer
+    from repro.obs import DispatchProfiler, Tracer
     tracer = Tracer(enabled=args.trace_out is not None)
+    profile_on = (args.profile or args.calibration_out is not None
+                  or args.calibration_in is not None)
+    profiler = DispatchProfiler(enabled=profile_on)
     if args.spec != "none" or args.policy:
         sched_kw = dict(n_slots=args.slots,
                         max_len=args.max_len, seed=args.seed,
-                        tracer=tracer,
+                        tracer=tracer, profiler=profiler,
                         page_size=args.page_size,
                         decode_block=args.decode_block, mesh=mesh,
                         policy=args.policy or "fcfs",
@@ -232,47 +250,73 @@ def main(argv=None):
                           max_len=args.max_len, seed=args.seed,
                           page_size=args.page_size,
                           decode_block=args.decode_block, mesh=mesh,
-                          tracer=tracer)
+                          tracer=tracer, profiler=profiler)
     else:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
-                     seed=args.seed, tracer=tracer)
+                     seed=args.seed, tracer=tracer, profiler=profiler)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size,
                             (args.prompt_len,)).tolist()
                for _ in range(args.requests)]
-    t0 = time.perf_counter()
-    if args.arrival_rate > 0:
-        from repro.serve.engine import run_open_loop
-        offsets = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
-                                            args.requests))
-        ids = run_open_loop(eng, prompts, offsets,
-                            max_new_tokens=args.max_new,
-                            temperature=args.temperature)
-        done = dict(eng.registry)
-    else:
-        ids = [eng.submit(p, max_new_tokens=args.max_new,
-                          temperature=args.temperature) for p in prompts]
-        done = eng.run_to_completion()
-    dt = time.perf_counter() - t0
-    n_tok = sum(len(done[i].out_tokens) for i in ids)
-    if args.spec != "none":
-        mode = (f"sched/{args.policy or 'fcfs'} + spec/{args.spec}, "
-                f"{eng.sync_count} host syncs")
-    elif args.policy:
-        mode = f"sched/{args.policy}, {eng.sync_count} host syncs"
-    elif args.paged or mesh is not None:
-        mode = f"paged, {eng.sync_count} host syncs"
-    else:
-        mode = "eager, 1 sync/token"
-    print(f"[serve] {cfg.name}: {len(ids)} requests, {n_tok} tokens in "
-          f"{dt:.1f}s ({n_tok/dt:.1f} tok/s, continuous batching over "
-          f"{args.slots} slots, {mode})")
-    if args.spec != "none" or args.policy:
-        print(f"[serve] sched telemetry: {eng.telemetry()}")
-    for i in ids[:3]:
-        print(f"  req {i}: {len(done[i].out_tokens)} tokens "
-              f"{done[i].out_tokens[:8]}…")
+    # the drive runs under try/finally: a mid-drive exception still
+    # flushes whatever telemetry exists (partial metrics / trace /
+    # calibration) for post-mortem, then propagates
+    try:
+        t0 = time.perf_counter()
+        if args.arrival_rate > 0:
+            from repro.serve.engine import run_open_loop
+            offsets = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                                args.requests))
+            ids = run_open_loop(eng, prompts, offsets,
+                                max_new_tokens=args.max_new,
+                                temperature=args.temperature)
+            done = dict(eng.registry)
+        else:
+            ids = [eng.submit(p, max_new_tokens=args.max_new,
+                              temperature=args.temperature)
+                   for p in prompts]
+            done = eng.run_to_completion()
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(done[i].out_tokens) for i in ids)
+        if args.spec != "none":
+            mode = (f"sched/{args.policy or 'fcfs'} + spec/{args.spec}, "
+                    f"{eng.sync_count} host syncs")
+        elif args.policy:
+            mode = f"sched/{args.policy}, {eng.sync_count} host syncs"
+        elif args.paged or mesh is not None:
+            mode = f"paged, {eng.sync_count} host syncs"
+        else:
+            mode = "eager, 1 sync/token"
+        print(f"[serve] {cfg.name}: {len(ids)} requests, {n_tok} tokens in "
+              f"{dt:.1f}s ({n_tok/dt:.1f} tok/s, continuous batching over "
+              f"{args.slots} slots, {mode})")
+        if args.spec != "none" or args.policy:
+            print(f"[serve] sched telemetry: {eng.telemetry()}")
+        for i in ids[:3]:
+            print(f"  req {i}: {len(done[i].out_tokens)} tokens "
+                  f"{done[i].out_tokens[:8]}…")
+    finally:
+        _write_artifacts(args, cfg, eng, mesh, tracer, profiler)
+    return 0
 
+
+def _write_artifacts(args, cfg, eng, mesh, tracer, profiler):
+    """Flush --metrics / --trace-out / --calibration-out.  Runs in the
+    drive's ``finally`` so a mid-drive exception still leaves partial
+    telemetry on disk."""
+    calib = None
+    if profiler.enabled:
+        from repro.core.costmodel import TIERS, CalibratedCostModel
+        calib = (CalibratedCostModel.load(args.calibration_in)
+                 if args.calibration_in else CalibratedCostModel())
+        records = calib.fit_profile(profiler, eng.lm.cfg)
+        calib.register_metrics(eng.metrics)
+        profiler.export_gauges(eng.metrics, TIERS["v5e-1"])
+        print(f"[serve] profiled {len(records)} dispatches across "
+              f"{len(calib.factors)} (kind × arm) calibration series")
+    if args.calibration_out and calib is not None:
+        calib.save(args.calibration_out)
+        print(f"[serve] calibration -> {args.calibration_out}")
     if args.metrics:
         # one snapshot carries engine counters, cost-model byte splits
         # and (on a mesh) the compiled decode dispatch's collective bytes
@@ -308,7 +352,6 @@ def main(argv=None):
         tracer.write(args.trace_out)
         print(f"[serve] trace ({len(tracer.events)} events) -> "
               f"{args.trace_out} (open in ui.perfetto.dev)")
-    return 0
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@ which exposes lock-free ``snapshot()`` / ``delta()`` reads plus
 Prometheus-text and JSON exporters.  ``repro.obs.trace`` records
 per-request lifecycle spans (submit → queue → admit → prefill-chunk* →
 decode-block* → spec-round* → preempt/readmit → retire) as
-Chrome/Perfetto trace-event JSON.
+Chrome/Perfetto trace-event JSON.  ``repro.obs.profile`` attributes
+measured wall-clock to every device dispatch by config arm and feeds
+the online cost-model calibration loop
+(``repro.core.costmodel.CalibratedCostModel``).
 
 Instrumentation is sync-free by construction: every span timestamp is a
 host clock the engines already read, and the decode-loop device stats
@@ -16,7 +19,11 @@ ride the existing ``lax.scan`` carry out through the block-boundary
 sync the engines already pay — ``sync_count`` is identical with tracing
 and metrics on.
 """
-from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import (MetricsRegistry, histogram_quantile,
+                               histogram_quantiles)
+from repro.obs.profile import DISPATCH_KINDS, DispatchProfiler
 from repro.obs.trace import PID_ENGINE, PID_REQUESTS, Tracer
 
-__all__ = ["MetricsRegistry", "Tracer", "PID_ENGINE", "PID_REQUESTS"]
+__all__ = ["MetricsRegistry", "Tracer", "DispatchProfiler",
+           "DISPATCH_KINDS", "PID_ENGINE", "PID_REQUESTS",
+           "histogram_quantile", "histogram_quantiles"]

@@ -34,6 +34,37 @@ DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
                    0.5, 1.0, 2.5, 5.0, 10.0, 30.0)
 
 
+def histogram_quantile(q: float, cum_counts: Sequence[int],
+                       bounds: Sequence[float] = DEFAULT_BUCKETS) -> float:
+    """Bucket-interpolated quantile from cumulative bucket counts
+    (``histogram_quantile`` semantics: linear interpolation inside the
+    covering bucket; ranks landing in +Inf clamp to the largest finite
+    bound).  ``cum_counts`` is the snapshot/delta ``buckets`` list —
+    ``len(bounds) + 1`` entries with the +Inf total last."""
+    total = cum_counts[-1]
+    if total <= 0:
+        return 0.0
+    rank = q * total
+    prev_bound, prev_cum = 0.0, 0
+    for le, c in zip(bounds, cum_counts):
+        if c >= rank:
+            if c == prev_cum:
+                return float(le)
+            return prev_bound + (le - prev_bound) * (rank - prev_cum) \
+                / (c - prev_cum)
+        prev_bound, prev_cum = float(le), c
+    return float(bounds[-1]) if len(bounds) else 0.0
+
+
+def histogram_quantiles(hist: dict, qs: Sequence[float] = (0.5, 0.95, 0.99),
+                        bounds: Sequence[float] = DEFAULT_BUCKETS) -> dict:
+    """Quantiles from one snapshot/delta histogram entry (the
+    ``{"buckets": [...], "sum": s, "count": n}`` shape) — the shared
+    percentile path for benchmarks and exporters."""
+    return {f"p{q * 100:g}": histogram_quantile(q, hist["buckets"], bounds)
+            for q in qs}
+
+
 def series_key(name: str, labels: Optional[dict] = None) -> str:
     """Canonical series id: ``name`` or ``name{k="v",...}`` (keys
     sorted, so the same label set always maps to the same series)."""
@@ -226,6 +257,10 @@ class MetricsRegistry:
                     suffix = f"{{{labels}}}" if labels else ""
                     lines.append(f"{base}_sum{suffix} {h['sum']}")
                     lines.append(f"{base}_count{suffix} {h['count']}")
+                    for q in (0.5, 0.95, 0.99):
+                        v = histogram_quantile(q, h["buckets"], m.buckets)
+                        lab = _merge_labels(labels, f'quantile="{q}"')
+                        lines.append(f"{base}{{{lab}}} {v}")
             else:
                 for key, v in sorted(m.collect().items()):
                     lines.append(f"{key} {v}")

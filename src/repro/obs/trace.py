@@ -4,7 +4,9 @@ A :class:`Tracer` records two kinds of tracks:
 
 * **pid 0 — "engine"**: one complete ("X") event per device dispatch
   (``prefill_dispatch`` / ``decode_block`` / ``spec_round``), so the
-  engine's duty cycle and batching are visible at a glance;
+  engine's duty cycle and batching are visible at a glance, plus
+  counter ("C") tracks sampling queue depth, live slots and page-pool
+  occupancy at the same block boundaries;
 * **pid 1 — "requests"**: one thread (tid = request id) per request,
   carrying its lifecycle spans — ``request`` (submit → retire) encloses
   ``queue`` (submit → admit, re-opened after a preemption: the readmit
@@ -103,6 +105,19 @@ class Tracer:
         if args:
             ev["args"] = args
         self.events.append(ev)
+
+    def counter(self, name: str, values: dict, *, pid: int = PID_ENGINE,
+                tid: int = 0, ts: Optional[float] = None):
+        """Perfetto counter track ("C"): one sampled value per series in
+        ``values``.  Engines emit these at block boundaries (queue depth,
+        live slots, page-pool occupancy) from host state they already
+        hold, so utilization timelines render alongside the spans at
+        zero added syncs."""
+        if not self.enabled:
+            return
+        self.events.append({"ph": "C", "name": name, "pid": pid,
+                            "tid": tid, "ts": self._us(ts),
+                            "args": {k: float(v) for k, v in values.items()}})
 
     # ------------------------------------------------------------------
     def to_json(self) -> dict:

@@ -410,6 +410,20 @@ class SchedEngine(PagedEngine):
                 tr.complete("prefill_dispatch", 0, t0, now, pid=PID_ENGINE,
                             args={"rows": n_ready, "cont": bool(cont),
                                   "tokens": int(clens[:n_ready].sum())})
+            prof = self.profiler
+            if prof.enabled:
+                if cont:
+                    cost = (self._chunk_jit,
+                            (self.params, self.cache, tokens, slots, starts,
+                             clens, temps, sub), {"max_pages": mp})
+                else:
+                    cost = (self._admit_jit,
+                            (self.params, self.cache, tokens, slots, clens,
+                             temps, sub), None)
+                prof.record("prefill_chunk" if cont else "admit", t0, now,
+                            tokens=int(clens[:n_ready].sum()), rows=n_ready,
+                            bucket=cpad, ctx=int(starts.max()) + cpad,
+                            cost=cost)
             for i, (slot, req, toks, clen) in enumerate(ready):
                 if tr.enabled:
                     tr.complete(

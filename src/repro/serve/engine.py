@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import DispatchProfiler
 from repro.obs.trace import PID_ENGINE, Tracer
 from repro.serve.paged import (PAGE, OutOfPagesError, PageAllocator,
                                scatter_prefill_cache, set_block_table_rows)
@@ -88,7 +89,8 @@ class _EngineBase:
 
     def __init__(self, lm, params, *, n_slots: int, max_len: int,
                  eos_id: int, metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 profiler: Optional[DispatchProfiler] = None):
         self.lm = lm
         self.params = params
         self.n_slots = n_slots
@@ -110,6 +112,14 @@ class _EngineBase:
         # already reads, so instrumentation adds zero device syncs
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        # per-dispatch device-time profiling (off by default): record()
+        # only consumes the t0/t1 host timestamps taken below anyway, so
+        # sync_count and token streams are identical with it on or off
+        self.profiler = (profiler if profiler is not None
+                         else DispatchProfiler(enabled=False))
+        self.profiler.bind(lm.cfg,
+                           model_parallel=getattr(lm.cfg, "model_parallel",
+                                                  1))
         m = self.metrics
         self._c_submitted = m.counter(
             "serve_requests_submitted_total", "requests accepted by submit()")
@@ -192,9 +202,11 @@ class _EngineBase:
 
 class Engine(_EngineBase):
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
-                 eos_id: int = -1, seed: int = 0, metrics=None, tracer=None):
+                 eos_id: int = -1, seed: int = 0, metrics=None, tracer=None,
+                 profiler=None):
         super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
-                         eos_id=eos_id, metrics=metrics, tracer=tracer)
+                         eos_id=eos_id, metrics=metrics, tracer=tracer,
+                         profiler=profiler)
         self.rng = np.random.default_rng(seed)
         self.cache = lm.init_cache(n_slots, max_len)
 
@@ -244,7 +256,17 @@ class Engine(_EngineBase):
                 self.params, self.cache, jnp.asarray(req.prompt),
                 jnp.int32(slot))
             logits = np.asarray(logits)
-            self.t_prefill_s += time.perf_counter() - req.t_admit
+            t1 = time.perf_counter()
+            self.t_prefill_s += t1 - req.t_admit
+            prof = self.profiler
+            if prof.enabled:
+                prof.record(
+                    "admit", req.t_admit, t1, tokens=plen, rows=1,
+                    bucket=plen, ctx=plen,
+                    cost=(self._prefill_one,
+                          (self.params, self.cache,
+                           jax.ShapeDtypeStruct((plen,), jnp.int32),
+                           jax.ShapeDtypeStruct((), jnp.int32)), None))
             self._obs_admit(req, req.t_admit, first=True)
             tok = self._sample(logits, req.temperature)
             req.out_tokens.append(tok)
@@ -290,6 +312,17 @@ class Engine(_EngineBase):
         if tr.enabled:
             tr.complete("decode_step", 0, t0, t1, pid=PID_ENGINE,
                         args={"rows": len(self.active)})
+            tr.counter("utilization", {"queue_depth": len(self.queue),
+                                       "slots_active": len(self.active)},
+                       ts=t1)
+        prof = self.profiler
+        if prof.enabled:
+            prof.record("decode_block", t0, t1, tokens=len(self.active),
+                        rows=len(self.active), steps=1, bucket=1,
+                        ctx=int(pos_by_slot.max()),
+                        cost=(self._decode,
+                              (self.params, tokens, self.cache,
+                               pos_by_slot), None))
 
         for slot, req in list(self.active.items()):
             tok = self._sample(logits[slot], req.temperature)
@@ -373,7 +406,7 @@ class PagedEngine(_EngineBase):
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
                  eos_id: int = -1, seed: int = 0, page_size: int = PAGE,
                  decode_block: int = 8, n_pages: Optional[int] = None,
-                 mesh=None, metrics=None, tracer=None):
+                 mesh=None, metrics=None, tracer=None, profiler=None):
         cfg = lm.cfg
         a = cfg.attention
         assert a is not None and a.kind != "mla" and a.window is None \
@@ -394,7 +427,8 @@ class PagedEngine(_EngineBase):
         if cfg_kw:
             lm = type(lm)(cfg.with_(**cfg_kw))
         super().__init__(lm, params, n_slots=n_slots, max_len=max_len,
-                         eos_id=eos_id, metrics=metrics, tracer=tracer)
+                         eos_id=eos_id, metrics=metrics, tracer=tracer,
+                         profiler=profiler)
         self.page_size = page_size
         self.decode_block = decode_block
         from repro.kvcache import paged_pool_shape
@@ -590,6 +624,13 @@ class PagedEngine(_EngineBase):
             tr.complete("prefill_dispatch", 0, t0, now, pid=PID_ENGINE,
                         args={"rows": len(admitted),
                               "tokens": int(plens.sum())})
+        prof = self.profiler
+        if prof.enabled:
+            prof.record("admit", t0, now, tokens=int(plens.sum()),
+                        rows=len(admitted), bucket=plen_pad, ctx=plen_pad,
+                        cost=(self._admit_jit,
+                              (self.params, self.cache, tokens, slot_ids,
+                               plens, self.temps[slot_ids], sub), None))
         for i, req in enumerate(admitted):
             t = int(tok0[i])
             req.out_tokens.append(t)
@@ -633,12 +674,27 @@ class PagedEngine(_EngineBase):
         self._c_tokens.inc(int(dstats[0]))
         self._c_eos.inc(int(dstats[1]))
         self._c_requant.inc(int(dstats[2]))
+        prof = self.profiler
+        if prof.enabled:
+            prof.record("decode_block", t0, now, tokens=int(dstats[0]),
+                        rows=len(self.active), steps=self.decode_block,
+                        bucket=self.decode_block,
+                        ctx=int(self.lengths.max()),
+                        cost=(self._decode_jit,
+                              (self.params, self.cache, self.last_tok,
+                               self.lengths, active_mask, self.remaining,
+                               self.temps, sub), None))
         tr = self.tracer
         if tr.enabled:
             tr.complete("decode_block", 0, t0, now, pid=PID_ENGINE,
                         args={"rows": len(self.active),
                               "steps": self.decode_block,
                               "tokens": int(dstats[0])})
+            tr.counter("utilization",
+                       {"queue_depth": len(self.queue),
+                        "slots_active": len(self.active),
+                        "pages_used": self.alloc.n_pages
+                        - len(self.alloc.free)}, ts=now)
             for slot, req in self.active.items():
                 n = int(emits[:, slot].sum())
                 if n:

@@ -287,7 +287,8 @@ class SpecEngine(SchedEngine):
         # drafting is decode-phase work (the draft-LM arm is a real
         # dispatch + sync): charge it, or the benchmark's phase split
         # would overstate spec decode throughput
-        self.t_decode_s += time.perf_counter() - t0
+        t_draft1 = time.perf_counter()
+        self.t_decode_s += t_draft1 - t0
         fed = np.zeros((self.n_slots, self.w_max), np.int32)
         widths = np.zeros((self.n_slots,), np.int32)
         ndraft = np.zeros((self.n_slots,), np.int32)
@@ -301,6 +302,11 @@ class SpecEngine(SchedEngine):
             widths[slot] = 1 + nd
             ndraft[slot] = nd
             active_mask[slot] = True
+        prof = self.profiler
+        if prof.enabled:
+            prof.record("draft_propose", t0, t_draft1,
+                        tokens=int(ndraft.sum()), rows=len(reqs),
+                        bucket=self.k_max, ctx=int(self.lengths.max()))
         if ndraft.sum() == 0:            # nothing to verify: plain decode
             self.spec_stats.fallback_steps += 1
             return super()._dispatch_decode(emitted)
@@ -336,6 +342,14 @@ class SpecEngine(SchedEngine):
         self.sync_count += 1
         now = time.perf_counter()
         self.t_decode_s += now - t0
+        if prof.enabled:
+            prof.record("spec_round", t0, now, tokens=int(n_emit.sum()),
+                        rows=len(reqs), bucket=self.w_max,
+                        ctx=int(self.lengths.max()),
+                        cost=(self._verify_jit,
+                              (self.params, self.cache, fed, self.lengths,
+                               widths, active_mask, self.remaining,
+                               self.temps, sub), {"max_pages": mp}))
         self.spec_stats.verify_steps += 1
         self._c_requant.inc(int(nrq))
         self._c_tokens.inc(int(n_emit.sum()))

@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro.obs import MetricsRegistry, Tracer
-from repro.obs.metrics import DEFAULT_BUCKETS, series_key
+from repro.obs.metrics import (DEFAULT_BUCKETS, histogram_quantile,
+                               histogram_quantiles, series_key)
 from repro.obs.trace import PID_REQUESTS, request_span_trees
 
 
@@ -91,6 +92,91 @@ def test_delta_counters_subtract_gauges_pass_through():
     # a series born after the snapshot keeps its full value
     c.inc(1, new="yes")
     assert m.delta(snap)["counters"]['n_total{new="yes"}'] == 1.0
+
+
+def test_delta_histogram_new_labeled_series_after_snapshot():
+    """A labeled histogram series born after the snapshot has no
+    baseline to subtract: the delta carries its full value."""
+    m = MetricsRegistry()
+    h = m.histogram("lat_seconds")
+    h.observe(0.1, phase="prefill")
+    snap = m.snapshot()
+    h.observe(0.2, phase="prefill")
+    h.observe(0.4, phase="decode")           # new series post-snapshot
+    d = m.delta(snap)["histograms"]
+    assert d['lat_seconds{phase="prefill"}']["count"] == 1
+    assert d['lat_seconds{phase="decode"}']["count"] == 1
+    assert d['lat_seconds{phase="decode"}']["sum"] == pytest.approx(0.4)
+
+
+def test_delta_histogram_buckets_subtract_elementwise():
+    """Cumulative bucket counts subtract bucket-by-bucket, so quantiles
+    over a delta reflect only the observations since the snapshot."""
+    m = MetricsRegistry()
+    h = m.histogram("w_seconds")
+    h.observe(0.002)                         # le >= 0.0025 before snap
+    snap = m.snapshot()
+    h.observe(0.2)                           # le >= 0.25 after snap
+    d = m.delta(snap)["histograms"]["w_seconds"]
+    assert d["count"] == 1
+    assert d["buckets"][DEFAULT_BUCKETS.index(0.0025)] == 0   # pre-snap
+    assert d["buckets"][DEFAULT_BUCKETS.index(0.1)] == 0
+    assert d["buckets"][DEFAULT_BUCKETS.index(0.25)] == 1
+    assert d["buckets"][-1] == 1                              # +Inf
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles (shared percentile path for exporters + benchmarks)
+
+
+def test_histogram_quantile_interpolates_within_bucket():
+    # 10 observations uniformly credited to the (0.1, 0.25] bucket:
+    # cumulative counts are 0 up to le=0.1, then 10 from le=0.25 on
+    cum = [0] * DEFAULT_BUCKETS.index(0.25) + [10] * (
+        len(DEFAULT_BUCKETS) - DEFAULT_BUCKETS.index(0.25) + 1)
+    # rank q*10 interpolates linearly between the 0.1 and 0.25 bounds
+    assert histogram_quantile(0.5, cum) == pytest.approx(
+        0.1 + (0.25 - 0.1) * 0.5)
+    assert histogram_quantile(1.0, cum) == pytest.approx(0.25)
+    # ranks below the first populated bucket stay inside it
+    assert histogram_quantile(0.01, cum) <= 0.25
+
+
+def test_histogram_quantile_edge_cases():
+    n = len(DEFAULT_BUCKETS) + 1
+    assert histogram_quantile(0.5, [0] * n) == 0.0          # empty
+    # everything in +Inf: clamp to the largest finite bound
+    cum = [0] * len(DEFAULT_BUCKETS) + [5]
+    assert histogram_quantile(0.99, cum) == DEFAULT_BUCKETS[-1]
+    # first bucket: interpolate from 0 toward the first bound
+    cum = [4] * n
+    assert 0.0 < histogram_quantile(0.5, cum) <= DEFAULT_BUCKETS[0]
+
+
+def test_histogram_quantiles_from_snapshot_dict():
+    m = MetricsRegistry()
+    h = m.histogram("lat_seconds")
+    for v in (0.03, 0.03, 0.03, 4.0):
+        h.observe(v)
+    qs = histogram_quantiles(m.snapshot()["histograms"]["lat_seconds"])
+    assert set(qs) == {"p50", "p95", "p99"}
+    assert qs["p50"] <= 0.05                  # p50 in the 0.05 bucket
+    assert 2.5 < qs["p99"] <= 5.0             # tail lands in (2.5, 5]
+
+
+def test_prometheus_text_exports_quantile_series():
+    m = MetricsRegistry()
+    h = m.histogram("lat_seconds", "latency")
+    h.observe(0.3)
+    h.observe(0.3, phase="decode")
+    text = m.to_prometheus_text()
+    # bare and labeled series each get interpolated quantile lines
+    assert 'lat_seconds{quantile="0.5"}' in text
+    assert 'lat_seconds{phase="decode",quantile="0.99"}' in text
+    for line in text.splitlines():
+        if line.startswith('lat_seconds{quantile="0.5"}'):
+            v = float(line.split()[-1])
+            assert 0.25 < v <= 0.5            # inside the covering bucket
 
 
 def test_prometheus_text_and_json_exporters():
