@@ -51,11 +51,20 @@ def _sha(b: bytes) -> str:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3):
+    def __init__(self, directory: str, *, keep: int = 3, metrics=None):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # corrupt/partial steps skipped during restore (surfaced as
+        # ``checkpoint_load_failures_total`` when a MetricsRegistry is
+        # passed; a silent fallback hid real disk corruption)
+        self.load_failures = 0
+        if metrics is not None:
+            metrics.counter("checkpoint_load_failures_total",
+                            "corrupt/partial checkpoint steps skipped "
+                            "during restore",
+                            fn=lambda: self.load_failures)
 
     # ------------------------------------------------------------------
     def save(self, step: int, params, opt_state=None, data_state=None,
@@ -180,8 +189,15 @@ class CheckpointManager:
                 return self._restore_step(s, like=like, shardings=shardings)
             except Exception as e:  # noqa: BLE001 - fall back to older step
                 last_err = e
+                self.load_failures += 1
                 if step is not None:
                     raise
+                # the fallback must not be silent: name the step and why
+                # it was skipped, so disk corruption is visible even when
+                # an older step saves the run
+                import warnings
+                warnings.warn(f"checkpoint step {s} failed to load "
+                              f"({e!r}); falling back to an older step")
         if last_err is not None:
             import warnings
             warnings.warn(f"no valid checkpoint found: {last_err}")

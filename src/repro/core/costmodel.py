@@ -250,6 +250,42 @@ def service_estimate(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
             "t_collective_decode_s": t_coll}
 
 
+def rung_estimate(cfg: ModelConfig, tier=TIERS["v5e-1"], *,
+                  spec_off: bool = False, prefill_chunk: int = None,
+                  kv_dtype: str = None, prompt: int = 256,
+                  gen: int = 64) -> Dict[str, float]:
+    """Price ONE degradation-ladder rung (``repro.resil.degrade``) with
+    the same rooflines the offline ``c_inf`` search uses: the rung's
+    overrides (spec gated off, shrunken prefill chunk, KV-dtype hint)
+    applied to ``cfg`` and run through :func:`service_estimate`.  The
+    ladder's rungs ARE search arms — this is what lets artifacts report
+    the modeled cost of each reflexive step next to its measured effect.
+
+    ``tier`` accepts a :class:`HwTier` or a :data:`TIERS` key; spec is
+    priced via :func:`spec_speedup` on the decode term (the only place
+    the per-request estimate sees the spec arm)."""
+    if isinstance(tier, str):
+        tier = TIERS[tier]
+    if kv_dtype is not None:
+        cfg = cfg.with_(kv_cache_dtype=kv_dtype)
+    spec = getattr(cfg, "spec_decode", "none")
+    est = service_estimate(cfg, tier, prompt=prompt, gen=gen,
+                           chunk=prefill_chunk)
+    if spec != "none" and not spec_off:
+        k = getattr(cfg, "spec_draft_k", 0)
+        speed = spec_speedup(SPEC_ACCEPT_RATE.get(spec, 0.0), k,
+                             draft_cost=SPEC_DRAFT_COST.get(spec, 0.05))
+        est["t_decode_tok_s"] /= speed
+        est["t_total_s"] = est["t_prefill_s"] + gen * est["t_decode_tok_s"]
+    return {"spec_off": bool(spec_off),
+            "prefill_chunk": prefill_chunk,
+            "kv_dtype": kv_dtype,
+            "t_prefill_s": est["t_prefill_s"],
+            "t_decode_tok_s": est["t_decode_tok_s"],
+            "t_total_s": est["t_total_s"],
+            "hbm_bytes_decode": est["hbm_bytes_decode"]}
+
+
 def quant_decode_scale(cfg: ModelConfig, tier: HwTier = TIERS["v5e-1"], *,
                        prompt: int = 512, gen: int = 128) -> float:
     """Modeled decode-step time of ``cfg`` relative to the same config

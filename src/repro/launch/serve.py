@@ -14,7 +14,10 @@ upfront.  ``--spec ngram|draft`` adds speculative decoding on top
 (``repro.spec``): draft -> batched paged verify -> exact accept/commit
 rounds, greedy output token-identical to non-speculative decode;
 ``--admission-control`` turns on EDF's goodput-optimal dropping of
-SLO-infeasible requests.
+SLO-infeasible requests.  ``--chaos`` arms the seeded fault-injection
+harness (``repro.resil``), ``--degrade`` the graceful-degradation
+ladder, ``--max-request-s`` per-request wall-clock deadlines — the
+overload-resilience stack.
 """
 from __future__ import annotations
 
@@ -131,6 +134,23 @@ def main(argv=None):
                          "KV local per shard; 'gather' is the naive "
                          "output-all-gather TP baseline (collective-byte "
                          "A/B only)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="seeded fault injection (repro.resil.inject; "
+                         "--policy/--spec engines only): e.g. "
+                         "'seed=1,oom=0.1,fault=0.1,spike=0.05,draft=0.3,"
+                         "shrink=2' — forced page exhaustion, transient "
+                         "dispatch faults, latency spikes, degenerate "
+                         "draft proposals, pool shrinkage")
+    ap.add_argument("--degrade", action="store_true",
+                    help="graceful-degradation ladder "
+                         "(repro.resil.degrade): under metrics-registry "
+                         "pressure disable spec -> shrink prefill chunks "
+                         "-> shed load with policy retry-after hints; "
+                         "monotone rungs with hysteresis")
+    ap.add_argument("--max-request-s", type=float, default=None,
+                    help="per-request wall-clock deadline: requests "
+                         "(queued or running) past it are cancelled, "
+                         "pages freed, outcome 'timed_out'")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics", default=None, metavar="PATH",
@@ -194,6 +214,11 @@ def main(argv=None):
     profile_on = (args.profile or args.calibration_out is not None
                   or args.calibration_in is not None)
     profiler = DispatchProfiler(enabled=profile_on)
+    injector = None
+    if args.chaos:
+        from repro.resil import FaultInjector
+        injector = FaultInjector.from_spec(args.chaos)
+        print(f"[serve] chaos armed: {injector.describe()}")
     if args.spec != "none" or args.policy:
         sched_kw = dict(n_slots=args.slots,
                         max_len=args.max_len, seed=args.seed,
@@ -207,7 +232,10 @@ def main(argv=None):
                         slo_ttft=None if args.slo_ttft is None
                         else args.slo_ttft / 1e3,
                         slo_tpot=None if args.slo_tpot is None
-                        else args.slo_tpot / 1e3)
+                        else args.slo_tpot / 1e3,
+                        injector=injector,
+                        ladder=True if args.degrade else None,
+                        max_request_s=args.max_request_s)
         if args.spec != "none":
             from repro.spec import SpecEngine, draft_config_of
             draft_lm = draft_params = None
@@ -250,7 +278,8 @@ def main(argv=None):
                           max_len=args.max_len, seed=args.seed,
                           page_size=args.page_size,
                           decode_block=args.decode_block, mesh=mesh,
-                          tracer=tracer, profiler=profiler)
+                          tracer=tracer, profiler=profiler,
+                          injector=injector)
     else:
         eng = Engine(lm, params, n_slots=args.slots, max_len=args.max_len,
                      seed=args.seed, tracer=tracer, profiler=profiler)
@@ -292,6 +321,14 @@ def main(argv=None):
               f"{args.slots} slots, {mode})")
         if args.spec != "none" or args.policy:
             print(f"[serve] sched telemetry: {eng.telemetry()}")
+            if injector is not None:
+                print(f"[serve] injected faults: {dict(injector.counts)}")
+            if args.degrade and getattr(eng, "ladder", None) is not None:
+                lad = eng.ladder
+                print(f"[serve] degrade ladder: rung={lad.name} "
+                      f"spec_off={lad.spec_off} "
+                      f"chunk={lad.chunk_for(eng.prefill_chunk, eng.page_size)}"
+                      f" kv_dtype_hint={lad.kv_dtype_hint or 'unchanged'}")
         for i in ids[:3]:
             print(f"  req {i}: {len(done[i].out_tokens)} tokens "
                   f"{done[i].out_tokens[:8]}…")

@@ -65,6 +65,29 @@ def histogram_quantiles(hist: dict, qs: Sequence[float] = (0.5, 0.95, 0.99),
             for q in qs}
 
 
+def histogram_fraction_le(hist: dict, bound: float,
+                          bounds: Sequence[float] = DEFAULT_BUCKETS) -> float:
+    """Fraction of a histogram's observations <= ``bound``
+    (bucket-interpolated; the inverse direction of
+    :func:`histogram_quantile`).  Applied to a ``delta()`` entry this is
+    the recent SLO-attainment estimate the degradation ladder
+    (``repro.resil.degrade``) reads as a pressure signal: e.g. the share
+    of TTFT observations inside the target since the last update."""
+    counts = hist["buckets"]
+    total = counts[-1]
+    if total <= 0:
+        return 1.0
+    prev_bound, prev_cum = 0.0, 0
+    for le, c in zip(bounds, counts):
+        if bound <= le:
+            if le == prev_bound:
+                return c / total
+            frac = (bound - prev_bound) / (le - prev_bound)
+            return min((prev_cum + frac * (c - prev_cum)) / total, 1.0)
+        prev_bound, prev_cum = float(le), c
+    return 1.0
+
+
 def series_key(name: str, labels: Optional[dict] = None) -> str:
     """Canonical series id: ``name`` or ``name{k="v",...}`` (keys
     sorted, so the same label set always maps to the same series)."""

@@ -12,7 +12,12 @@ A :class:`Tracer` records two kinds of tracks:
   ``queue`` (submit → admit, re-opened after a preemption: the readmit
   wait), then per-dispatch ``prefill_chunk`` / ``decode_block`` /
   ``spec_round`` complete events whose args carry tokens / pages /
-  policy labels, plus ``preempt`` instant markers.
+  policy labels, plus ``preempt`` instant markers.  The closing
+  ``request`` span's args carry the request's terminal ``outcome``
+  (``ok | shed | timed_out | failed`` — ``repro.resil``), and resilient
+  engines add ``fault`` instants on the engine track (an injected or
+  real transient dispatch error, with its kind) and ``cancel`` instants
+  on the request track (deadline expiry / retries exhausted).
 
 Every timestamp is a host ``time.perf_counter()`` the engines already
 take for their existing latency accounting — tracing never adds a

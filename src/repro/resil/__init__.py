@@ -1,0 +1,42 @@
+"""repro.resil — overload-resilient serving: fault injection, graceful
+degradation, request-level recovery.
+
+Production conditions include page-pool exhaustion, transient runtime
+faults, and sustained overload — not just the steady-state traffic the
+offline ``c_inf`` search optimizes for.  This package gives the serving
+stack a tested failure story:
+
+* ``errors``  — the structured taxonomy recovery keys on:
+  :class:`TransientDispatchError` (preempt-and-requeue with backoff),
+  injected-fault markers, and the request outcome vocabulary
+  (:data:`OUTCOMES` — ``ok | shed | timed_out | failed``; every request
+  retires with exactly one).
+* ``inject``  — :class:`FaultInjector`: a deterministic, seeded chaos
+  harness hooked into the allocator (forced pool shrinkage, spurious
+  page faults), every engine dispatch boundary (latency spikes,
+  transient dispatch exceptions), and the spec drafter (degenerate
+  proposals).  Disabled injection is sync-count- and token-identical to
+  no injection at all.
+* ``degrade`` — :class:`DegradationLadder`: monotone service rungs with
+  asymmetric hysteresis (spec off → smaller prefill chunks → KV-int8
+  hint → load shedding with retry-after), driven by pressure signals
+  already in the metrics registry and priced by the same cost model the
+  offline tuner uses — the reflexive half of the future online
+  controller (ROADMAP open item 2).
+
+``SchedEngine(injector=, ladder=, max_request_s=)`` wires all three in;
+``launch/serve --chaos/--degrade/--max-request-s`` and
+``benchmarks/serving_throughput --chaos`` drive them end to end.
+"""
+from repro.resil.degrade import RUNG_NAMES, DegradationLadder
+from repro.resil.errors import (OUTCOMES, InjectedFault, InjectedPageFault,
+                                ResilienceError, TransientDispatchError,
+                                is_transient)
+from repro.resil.inject import FAULT_KINDS, FaultInjector
+
+__all__ = [
+    "OUTCOMES", "ResilienceError", "TransientDispatchError",
+    "InjectedFault", "InjectedPageFault", "is_transient",
+    "FaultInjector", "FAULT_KINDS",
+    "DegradationLadder", "RUNG_NAMES",
+]

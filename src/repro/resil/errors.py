@@ -1,0 +1,75 @@
+"""Structured error taxonomy for overload-resilient serving.
+
+The scheduler's recovery logic keys on WHICH class of failure it sees,
+not on string matching:
+
+* :class:`TransientDispatchError` — a dispatch-boundary failure that is
+  expected to succeed on retry (injected chaos faults, runtime resource
+  exhaustion).  ``SchedEngine`` preempts-and-requeues the affected slots
+  with bounded exponential backoff instead of propagating.
+* :class:`InjectedFault` / :class:`InjectedPageFault` — the seeded
+  fault-injection harness (``repro.resil.inject``) raises these so
+  recovery code (and tests) can tell a synthetic fault from a real one.
+  ``InjectedPageFault`` additionally subclasses
+  :class:`~repro.serve.paged.OutOfPagesError` so it rides the
+  scheduler's EXISTING evict-retry admission path.
+
+Anything outside the taxonomy (assertion errors, shape mismatches,
+keyboard interrupts) keeps propagating — silent retry of a programming
+error would be worse than the crash.
+
+Every request retires with exactly one recorded outcome from
+:data:`OUTCOMES`, surfaced through the ``resil_requests_total{outcome=}``
+metric family and the trace ``request``-span end args.
+"""
+from __future__ import annotations
+
+from repro.serve.paged import OutOfPagesError
+
+#: Request retirement outcomes (``Request.outcome``): normal completion,
+#: load-shed (admission rejection with retry-after), wall-clock deadline
+#: cancellation, and retries-exhausted / unservable failure.
+OUTCOMES = ("ok", "shed", "timed_out", "failed")
+
+
+class ResilienceError(RuntimeError):
+    """Base class of the resilience taxonomy."""
+
+
+class TransientDispatchError(ResilienceError):
+    """A dispatch failed in a way that is expected to be recoverable:
+    the scheduler preempts-and-requeues the affected slots (recompute-
+    on-readmit makes that exact) and retries after backoff."""
+
+    def __init__(self, msg: str = "", kind: str = "dispatch"):
+        super().__init__(msg or f"transient {kind} failure")
+        self.kind = kind
+
+
+class InjectedFault(TransientDispatchError):
+    """A fault raised by the seeded injection harness at an engine
+    dispatch boundary (``repro.resil.inject.FaultInjector``)."""
+
+
+class InjectedPageFault(OutOfPagesError):
+    """An injected spurious allocation failure.  Subclasses
+    ``OutOfPagesError`` so the allocator's callers handle it through
+    their existing evict/retry/wait paths; recovery code checks the
+    subclass to avoid cancelling a feasible request over a synthetic
+    fault."""
+
+
+#: Substrings of runtime error messages treated as transient (XLA /
+#: runtime resource pressure that a retry after backoff can clear).
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "DEADLINE_EXCEEDED",
+                      "UNAVAILABLE")
+
+
+def is_transient(exc: BaseException) -> bool:
+    """True when ``exc`` should be recovered via preempt-and-requeue."""
+    if isinstance(exc, TransientDispatchError):
+        return True
+    if isinstance(exc, RuntimeError):
+        msg = str(exc)
+        return any(m in msg for m in _TRANSIENT_MARKERS)
+    return False

@@ -31,6 +31,11 @@ DEFAULT_TTFT_S = 0.5
 #: discount unbounded, which is the admission guarantee.
 DEFAULT_SJF_AGING = 0.05
 
+#: Base retry-after quantum (seconds) for shed admissions
+#: (``repro.resil``): the hint scales with the queue depth ahead of the
+#: shed request, so a deeper backlog pushes retries further out.
+DEFAULT_RETRY_AFTER_S = 0.1
+
 
 def _gen_len(req) -> int:
     return len(req.out_tokens)
@@ -59,6 +64,14 @@ class Policy:
         unmeetable (goodput-optimal dropping).  Base policies never
         drop; deadline-EDF overrides with a cost-model check."""
         return False
+
+    def retry_after(self, req, now: float, depth: int) -> float:
+        """Client-facing retry-after hint (seconds) when ``req`` is shed
+        under overload (``repro.resil.degrade``'s shed rung): when could
+        a resubmission plausibly be served?  Base heuristic: one quantum
+        per queued request ahead of it.  Cost-model policies refine the
+        quantum with their own service estimates."""
+        return max(depth, 1) * DEFAULT_RETRY_AFTER_S
 
 
 class FCFS(Policy):
@@ -104,6 +117,12 @@ class SJF(Policy):
         # get a starved job ADMITTED, not to evict whoever waited least
         return (self.remaining_s(req), req.rid)
 
+    def retry_after(self, req, now: float, depth: int) -> float:
+        # the backlog drains at roughly the modeled service rate, so the
+        # hint is the shed request's own estimate times its queue rank
+        return max(depth, 1) * max(self.remaining_s(req),
+                                   DEFAULT_RETRY_AFTER_S)
+
 
 class EDF(Policy):
     """Earliest-deadline-first on the TTFT SLO: deadline = submit time +
@@ -147,6 +166,12 @@ class EDF(Policy):
                                prompt=max(_remaining_prefill(req), 1),
                                gen=0, chunk=self.prefill_chunk)
         return now + est["t_prefill_s"] > dl
+
+    def retry_after(self, req, now: float, depth: int) -> float:
+        # a shed EDF request's deadline is already blown; suggest coming
+        # back after the backlog ahead of it has plausibly drained
+        slack = max(self.deadline(req) - now, 0.0)
+        return slack + max(depth, 1) * DEFAULT_RETRY_AFTER_S
 
 
 def make_policy(name: str, *, cfg=None, tier: str = "v5e-1",

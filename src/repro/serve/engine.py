@@ -37,6 +37,7 @@ import numpy as np
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.profile import DispatchProfiler
 from repro.obs.trace import PID_ENGINE, Tracer
+from repro.resil.errors import OUTCOMES
 from repro.serve.paged import (PAGE, OutOfPagesError, PageAllocator,
                                scatter_prefill_cache, set_block_table_rows)
 
@@ -82,6 +83,11 @@ class Request:
     preemptions: int = 0
     progress: int = 0                  # prefill tokens already cached
     rejected: bool = False             # admission-time SLO-infeasible drop
+    # --- resilience surface (repro.resil; inert without chaos/ladder) ----
+    outcome: Optional[str] = None      # one of resil.OUTCOMES, set at retire
+    retries: int = 0                   # transient-fault recovery attempts
+    not_before: float = 0.0            # backoff gate for re-admission
+    retry_after_s: Optional[float] = None   # shed hint for the client
 
 
 class _EngineBase:
@@ -128,6 +134,11 @@ class _EngineBase:
             "requests finished (incl. admission-time rejects)")
         self._c_tokens = m.counter(
             "serve_tokens_emitted_total", "tokens appended across requests")
+        self._c_outcome = m.counter(
+            "resil_requests_total",
+            "request retirements by terminal outcome")
+        for o in OUTCOMES:       # pre-create every series at 0
+            self._c_outcome.inc(0.0, outcome=o)
         self._h_queue = m.histogram(
             "serve_queue_wait_seconds", "submit -> first slot grant")
         self._h_ttft = m.histogram(
@@ -168,6 +179,13 @@ class _EngineBase:
 
     def _obs_retire(self, req: Request):
         self._c_retired.inc()
+        # every request retires with exactly ONE outcome: recovery paths
+        # (repro.resil) set it explicitly before retiring; the default
+        # vocabulary maps the legacy admission-reject to "shed" and a
+        # normal completion to "ok"
+        if req.outcome is None:
+            req.outcome = "shed" if req.rejected else "ok"
+        self._c_outcome.inc(outcome=req.outcome)
         if (req.t_done is not None and req.t_first is not None
                 and len(req.out_tokens) > 1):
             self._h_tpot.observe((req.t_done - req.t_first)
@@ -175,7 +193,8 @@ class _EngineBase:
         self.tracer.end("request", req.rid, ts=req.t_done,
                         args={"tokens": len(req.out_tokens),
                               "preemptions": req.preemptions,
-                              "rejected": req.rejected})
+                              "rejected": req.rejected,
+                              "outcome": req.outcome})
 
     def submit(self, prompt, **kw) -> int:
         prompt = np.asarray(prompt, np.int32)
@@ -406,7 +425,8 @@ class PagedEngine(_EngineBase):
     def __init__(self, lm, params, *, n_slots: int = 4, max_len: int = 512,
                  eos_id: int = -1, seed: int = 0, page_size: int = PAGE,
                  decode_block: int = 8, n_pages: Optional[int] = None,
-                 mesh=None, metrics=None, tracer=None, profiler=None):
+                 mesh=None, metrics=None, tracer=None, profiler=None,
+                 injector=None):
         cfg = lm.cfg
         a = cfg.attention
         assert a is not None and a.kind != "mla" and a.window is None \
@@ -437,6 +457,13 @@ class PagedEngine(_EngineBase):
         if n_pages is None:
             n_pages = default_pages                  # incl. null page 0
         self.alloc = PageAllocator(n_pages, pages_per_slot, n_slots)
+        # chaos harness (repro.resil.inject): hooks at the allocator and
+        # the host side of every dispatch.  None / disabled is
+        # sync-count- and token-identical to the pre-resilience engine.
+        self.injector = injector
+        if injector is not None:
+            self.alloc.injector = injector
+            injector.register_metrics(self.metrics)
         self.cache = lm.init_paged_cache(n_slots, n_pages, pages_per_slot,
                                          page_size=page_size)
         if mp > 1:
@@ -558,6 +585,15 @@ class PagedEngine(_EngineBase):
     # ------------------------------------------------------------------
     # host loop
 
+    def _maybe_inject(self, kind: str) -> None:
+        """Chaos hook at the host side of a dispatch boundary: no-op
+        without an enabled injector; may sleep (latency spike) or raise
+        :class:`~repro.resil.errors.InjectedFault` BEFORE any state for
+        the dispatch is committed."""
+        inj = self.injector
+        if inj is not None and inj.enabled:
+            inj.pre_dispatch(kind)
+
     def _retire(self, slot: int, now: float):
         req = self.active.pop(slot)
         req.done = True
@@ -597,6 +633,7 @@ class PagedEngine(_EngineBase):
         return admitted
 
     def _dispatch_admit(self, admitted: List[Request], emitted: list):
+        self._maybe_inject("admit")
         plens = np.asarray([len(r.prompt) for r in admitted], np.int32)
         slot_ids = np.asarray([r.slot for r in admitted], np.int32)
         plen_pad = _pow2_bucket(int(plens.max()))
@@ -650,6 +687,7 @@ class PagedEngine(_EngineBase):
                 self._retire(req.slot, now)
 
     def _dispatch_decode(self, emitted: list):
+        self._maybe_inject("decode_block")
         active_mask = np.zeros((self.n_slots,), bool)
         for slot in self.active:
             active_mask[slot] = True

@@ -61,14 +61,51 @@ class PageAllocator:
         self.table = np.zeros((n_slots, max_pages_per_slot), np.int32)
         self.refs = np.zeros((n_pages,), np.int32)
         self._owned: Dict[int, List[int]] = {}
+        # optional chaos harness (repro.resil.inject.FaultInjector): when
+        # set AND enabled, _take consults it for spurious page faults and
+        # forced pool shrinkage.  None (the default) is the untouched
+        # pre-resilience allocation path.
+        self.injector = None
 
     def pages_needed(self, seq_len: int, page_size: int = PAGE) -> int:
         return (seq_len + page_size - 1) // page_size
 
+    def occupancy(self, top: int = 3) -> dict:
+        """Point-in-time pool snapshot for post-mortems: free/total
+        pages (null page excluded), pages pinned beyond slot ownership
+        (prefix-cache references), and the largest slot holders."""
+        holders = sorted(((s, len(p)) for s, p in self._owned.items() if p),
+                         key=lambda x: -x[1])[:top]
+        slot_pages = sum(len(p) for p in self._owned.values())
+        referenced = int((self.refs > 0).sum())
+        used = self.n_pages - 1 - len(self.free)
+        return {"free": len(self.free), "total": self.n_pages - 1,
+                "used": used, "slot_pages": slot_pages,
+                "cache_only_pages": used - len(
+                    {p for ps in self._owned.values() for p in ps}),
+                "referenced": referenced,
+                "top_holders": holders}
+
+    def occupancy_summary(self, top: int = 3) -> str:
+        """One-line occupancy rendering appended to every
+        OutOfPagesError message (post-mortem debuggability)."""
+        o = self.occupancy(top)
+        holders = ", ".join(f"slot {s}: {n}p" for s, n in o["top_holders"]) \
+            or "none"
+        return (f"pool {o['used']}/{o['total']} pages used "
+                f"({o['free']} free, {o['cache_only_pages']} cache-held), "
+                f"top holders: {holders}")
+
     def _take(self, need: int) -> List[int]:
-        if need > len(self.free):
+        avail = len(self.free)
+        inj = self.injector
+        if inj is not None and inj.enabled:
+            inj.page_fault_check(self)     # may raise InjectedPageFault
+            avail = max(avail - inj.reserved_pages(), 0)
+        if need > avail:
             raise OutOfPagesError(
-                f"need {need} pages, {len(self.free)} free")
+                f"need {need} pages, {avail} free; "
+                f"{self.occupancy_summary()}")
         return [self.free.pop() for _ in range(need)]
 
     def alloc(self, slot: int, need: int) -> List[int]:
@@ -86,7 +123,8 @@ class PageAllocator:
         total = len(shared) + need
         if total > self.max_pages_per_slot:
             raise OutOfPagesError(
-                f"need {total} pages > {self.max_pages_per_slot} per slot")
+                f"need {total} pages > {self.max_pages_per_slot} per slot; "
+                f"{self.occupancy_summary()}")
         fresh = self._take(need)
         for p in shared:
             self.refs[p] += 1
@@ -107,7 +145,8 @@ class PageAllocator:
         n0 = len(owned)
         if n0 + extra > self.max_pages_per_slot:
             raise OutOfPagesError(
-                f"{n0}+{extra} pages > {self.max_pages_per_slot} per slot")
+                f"{n0}+{extra} pages > {self.max_pages_per_slot} per slot; "
+                f"{self.occupancy_summary()}")
         fresh = self._take(extra)
         for p in fresh:
             self.refs[p] = 1

@@ -264,6 +264,12 @@ class SpecEngine(SchedEngine):
     def _dispatch_decode(self, emitted: list) -> None:
         if self.spec_arm == "none":
             return super()._dispatch_decode(emitted)
+        if self.ladder is not None and self.ladder.spec_off:
+            # degradation rung >= spec_off: stop gambling decode budget
+            # on drafts; plain fused decode is token-identical for the
+            # greedy stream, just slower per emitted token
+            self.spec_stats.fallback_steps += 1
+            return super()._dispatch_decode(emitted)
         if not self._spec_allowed():
             self.spec_stats.skipped_urgent += 1
             self.spec_stats.fallback_steps += 1
@@ -271,6 +277,9 @@ class SpecEngine(SchedEngine):
         return self._spec_round(emitted)
 
     def _spec_round(self, emitted: list) -> None:
+        # chaos hook BEFORE any draft/verify state is built: a raise
+        # here preempts cleanly (same contract as the decode hook)
+        self._maybe_inject("spec_round")
         reqs = list(self.active.items())
         # --- draft ----------------------------------------------------
         batch = []
@@ -284,6 +293,11 @@ class SpecEngine(SchedEngine):
         t_round0 = t0 = time.perf_counter()   # spec_round span covers
         with self._mesh_ctx():                # draft + verify + commit
             proposals = self.drafter.propose_batch(batch, self.k_max)
+        if self.injector is not None and self.injector.enabled:
+            # degenerate-proposal injection: exact verify/accept must
+            # reject garbage drafts without perturbing the greedy stream
+            proposals = self.injector.mangle_proposals(proposals,
+                                                       self.k_max)
         # drafting is decode-phase work (the draft-LM arm is a real
         # dispatch + sync): charge it, or the benchmark's phase split
         # would overstate spec decode throughput
@@ -385,6 +399,10 @@ class SpecEngine(SchedEngine):
     def _retire(self, slot: int, now: float):
         self.controller.reset(slot)
         super()._retire(slot, now)
+
+    def _cancel_slot(self, slot: int, now: float, outcome: str):
+        self.controller.reset(slot)
+        super()._cancel_slot(slot, now, outcome)
 
     # ------------------------------------------------------------------
     def telemetry(self, since=None) -> dict:

@@ -235,6 +235,7 @@ def test_request_span_trees_nesting_and_malformed():
 EAGER_COUNTERS = {
     "serve_requests_submitted_total", "serve_requests_retired_total",
     "serve_tokens_emitted_total", "serve_phase_seconds_total",
+    "resil_requests_total",
 }
 EAGER_GAUGES = {"serve_queue_depth", "serve_slots_active"}
 EAGER_HISTS = {"serve_queue_wait_seconds", "serve_ttft_seconds",

@@ -1,0 +1,416 @@
+"""Overload resilience (repro.resil): fault injection, the graceful-
+degradation ladder, and request-level recovery in the scheduler.
+
+The chaos property test is the subsystem's acceptance check: under a
+random seeded fault schedule (spurious page faults, transient dispatch
+failures, latency spikes, a shrunken pool) the engine must not crash,
+must leak no pages, must retire every admitted request with exactly one
+outcome, and every SURVIVING request's greedy tokens must match the
+fault-free run — recovery is recompute-exact, never stream-corrupting.
+Faults-off must be free: a disabled injector changes neither sync
+counts nor token streams.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.resil import (OUTCOMES, DegradationLadder, FaultInjector,
+                         InjectedFault, RUNG_NAMES)
+from repro.serve.paged import OutOfPagesError, PageAllocator
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                              # CI installs it; local
+    _HAS_HYPOTHESIS = False                      # runs skip just this test
+
+
+# ---------------------------------------------------------------------------
+# injector unit surface
+
+
+def test_injector_spec_parse_and_describe():
+    inj = FaultInjector.from_spec(
+        "seed=3,oom=0.5,fault=0.25,spike=0.1,spike_s=0.001,draft=0.3,"
+        "shrink=2")
+    assert inj.enabled
+    assert (inj.seed, inj.oom_p, inj.fault_p) == (3, 0.5, 0.25)
+    assert (inj.draft_p, inj.shrink_pages) == (0.3, 2)
+    assert inj.describe()["spike_s"] == 0.001
+    assert FaultInjector.from_spec("") is None
+    assert FaultInjector.from_spec(None) is None
+    assert not FaultInjector(0).enabled          # all knobs zero
+    with pytest.raises(ValueError, match="unknown chaos knob"):
+        FaultInjector.from_spec("bogus=1")
+
+
+def test_injector_schedule_is_seed_deterministic():
+    def schedule(seed):
+        inj = FaultInjector(seed, fault_p=0.5)
+        out = []
+        for _ in range(32):
+            try:
+                inj.pre_dispatch("decode_block")
+                out.append(0)
+            except InjectedFault as e:
+                assert e.kind == "decode_block"
+                out.append(1)
+        return out
+
+    assert schedule(7) == schedule(7), "same seed must replay exactly"
+    assert schedule(7) != schedule(8)
+    inj = FaultInjector(0, fault_p=0.5)
+    for _ in range(32):
+        try:
+            inj.pre_dispatch("admit")
+        except InjectedFault:
+            pass
+    assert inj.counts["dispatch"] == sum(schedule(0))
+
+
+def test_injector_shrink_and_oom_ride_the_allocator():
+    al = PageAllocator(8, max_pages_per_slot=6, n_slots=2)
+    al.injector = FaultInjector(0, shrink_pages=3)
+    # 7 usable pages minus 3 reserved: the 5th allocation must fault
+    al.alloc(0, 4)
+    with pytest.raises(OutOfPagesError) as ei:
+        al.extend(0, 1)
+    assert "free" in str(ei.value), "raise must carry occupancy"
+    al.injector = FaultInjector(1, oom_p=1.0)
+    with pytest.raises(OutOfPagesError, match="injected page fault"):
+        al.extend(0, 1)
+    assert al.injector.counts["page_oom"] == 1
+
+
+def test_oom_raise_carries_occupancy_snapshot():
+    al = PageAllocator(6, max_pages_per_slot=8, n_slots=2)
+    al.alloc(0, 3)
+    al.alloc(1, 2)
+    with pytest.raises(OutOfPagesError) as ei:
+        al.extend(1, 2)
+    msg = str(ei.value)
+    assert "0 free" in msg and "slot 0: 3p" in msg, \
+        "OutOfPagesError must carry the pool occupancy snapshot"
+    occ = al.occupancy()
+    assert occ["free"] == 0 and occ["total"] == 5 and occ["used"] == 5
+    assert tuple(occ["top_holders"][0]) == (0, 3)
+
+
+def test_injector_mangles_drafts_per_slot_deterministically():
+    inj = FaultInjector(5, draft_p=1.0)
+    props = {0: np.arange(3, dtype=np.int32), 1: None,
+             2: np.arange(2, dtype=np.int32)}
+    out = inj.mangle_proposals(props, k_max=4)
+    assert out[1] is None
+    assert list(out[0]) == [0, 0, 0, 0] and list(out[2]) == [0, 0, 0, 0]
+    assert props[0][0] == 0 or props[0][1] == 1   # input not clobbered
+    assert inj.counts["draft"] == 2
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+
+
+def _registry():
+    from repro.obs.metrics import MetricsRegistry
+    return MetricsRegistry()
+
+
+def test_ladder_hysteresis_escalates_fast_relaxes_slow():
+    m = _registry()
+    depth = {"v": 0.0}
+    m.gauge("serve_queue_depth", "queued requests", fn=lambda: depth["v"])
+    lad = DegradationLadder(m, n_slots=2, dwell_ticks=2, cool_ticks=3)
+    assert lad.update() == 0 and lad.last_pressure == 0.0
+    depth["v"] = 8.0                        # pressure saturates at 1.0
+    assert lad.update() == 0, "one hot tick must not escalate (dwell)"
+    assert lad.update() == 1, "dwell_ticks consecutive hot ticks do"
+    lad.update()
+    assert lad.update() == 2, "monotone: one rung per dwell window"
+    depth["v"] = 0.0
+    assert lad.update() == 2 and lad.update() == 2, \
+        "cooling is slower than escalating (cool_ticks)"
+    assert lad.update() == 1
+    assert lad.transitions == 3
+    # a mid-band pressure (low < p < high) resets both streaks
+    depth["v"] = 3.0                        # 3 / (2*2) = 0.75
+    lad.update()
+    lad.update()
+    assert lad.rung == 1
+
+
+def test_ladder_rung_surface_is_monotone():
+    m = _registry()
+    lad = DegradationLadder(m, n_slots=2)
+    assert lad.name == "full" and not lad.spec_off and not lad.shed
+    assert lad.chunk_for(64, 8) == 64 and lad.kv_dtype_hint is None
+    assert lad.draft_k_cap(6) == 6
+    seen = []
+    for rung, name in enumerate(RUNG_NAMES):
+        lad.rung = rung
+        seen.append((lad.name, lad.spec_off, lad.chunk_for(64, 8),
+                     lad.kv_dtype_hint, lad.shed))
+    assert [s[0] for s in seen] == list(RUNG_NAMES)
+    assert [s[1] for s in seen] == [False, True, True, True, True]
+    assert [s[2] for s in seen] == [64, 64, 32, 32, 32]
+    assert [s[3] for s in seen] == [None, None, None, "int8", "int8"]
+    assert [s[4] for s in seen] == [False, False, False, False, True]
+    lad.rung = 2
+    assert lad.chunk_for(8, 8) == 8, "chunk stays a positive page multiple"
+    assert lad.draft_k_cap(6) == 0
+
+
+def test_ladder_pricing_covers_every_rung():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2-1.5b")
+    m = _registry()
+    lad = DegradationLadder(m, n_slots=2)
+    rows = lad.priced(cfg, prompt=64, gen=16, base_chunk=64, page_size=8)
+    assert [r["name"] for r in rows] == list(RUNG_NAMES)
+    assert all(r["t_total_s"] > 0 for r in rows)
+    by = {r["name"]: r for r in rows}
+    assert by["kv_int8"]["hbm_bytes_decode"] < by["full"]["hbm_bytes_decode"]
+    assert by["chunk"]["prefill_chunk"] == 32
+    assert by["full"]["prefill_chunk"] == 64
+
+
+def test_rung_estimate_prices_the_arms():
+    from repro.configs import get_smoke_config
+    from repro.core.costmodel import rung_estimate
+    cfg = get_smoke_config("qwen2-1.5b")
+    full = rung_estimate(cfg, "v5e-1", prompt=64, gen=16)
+    int8 = rung_estimate(cfg, "v5e-1", kv_dtype="int8", prompt=64, gen=16)
+    assert int8["hbm_bytes_decode"] < full["hbm_bytes_decode"]
+    assert full["t_total_s"] == pytest.approx(
+        full["t_prefill_s"] + 16 * full["t_decode_tok_s"])
+
+
+# ---------------------------------------------------------------------------
+# policy retry-after hints
+
+
+def test_retry_after_scales_with_queue_depth():
+    from repro.configs import get_smoke_config
+    from repro.sched.policy import EDF, FCFS, SJF
+
+    class R:
+        rid = 0
+        t_submit = 100.0
+        prompt = [1] * 16
+        out_tokens = []
+        progress = 0
+        max_new_tokens = 8
+        slo_ttft = None
+
+    req = R()
+    for pol in (FCFS(), SJF(get_smoke_config("qwen2-1.5b")),
+                EDF(0.5)):
+        h1 = pol.retry_after(req, 100.0, depth=1)
+        h4 = pol.retry_after(req, 100.0, depth=4)
+        assert 0 < h1 < h4, f"{pol.name}: hint must grow with backlog"
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end (mirrors test_sched's smoke setup)
+
+
+def _setup():
+    from repro.configs import get_smoke_config
+    from repro.models.model import LM
+    cfg = get_smoke_config("qwen2-1.5b").with_(dtype="float32")
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    return LM(cfg), params, rng
+
+
+def _sched(lm, params, **kw):
+    from repro.sched import SchedEngine
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("seed", 0)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("decode_block", 4)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("prefix_cache", False)
+    return SchedEngine(lm, params, **kw)
+
+
+def _drive(eng, prompts, max_new=12):
+    ids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    done = eng.run_to_completion()
+    return ids, done
+
+
+_PROMPT_LENS = (8, 5, 12, 8, 3, 10, 6, 9)
+_STATE = {}
+
+
+def _prompts_and_baseline():
+    """Fault-free reference streams, computed once per test session."""
+    if "base" not in _STATE:
+        lm, params, rng = _setup()
+        prompts = [rng.integers(0, lm.cfg.vocab_size, (n,)).tolist()
+                   for n in _PROMPT_LENS]
+        ids, done = _drive(_sched(lm, params), prompts)
+        _STATE["base"] = (lm, params, prompts,
+                          [list(done[i].out_tokens) for i in ids])
+    return _STATE["base"]
+
+
+def test_faults_off_is_sync_and_token_identical():
+    """The PR 8/9 idiom: a constructed-but-disabled injector must change
+    nothing — same syncs, same tokens, non-resilient step path."""
+    lm, params, prompts, base_outs = _prompts_and_baseline()
+    ref = _sched(lm, params)
+    rids, rdone = _drive(ref, prompts)
+    inert = _sched(lm, params, injector=FaultInjector(0),
+                   ladder=None, max_request_s=None)
+    assert not inert.resilient
+    iids, idone = _drive(inert, prompts)
+    assert [idone[i].out_tokens for i in iids] \
+        == [rdone[i].out_tokens for i in rids]
+    assert inert.sync_count == ref.sync_count
+    assert all(idone[i].outcome == "ok" for i in iids)
+
+
+def _chaos_invariants(seed, *, oom_p=0.1, fault_p=0.15, spike_p=0.1,
+                      shrink=1, engine="sched"):
+    """Drive a seeded fault schedule to completion and check the
+    subsystem's acceptance invariants."""
+    lm, params, prompts, base_outs = _prompts_and_baseline()
+    inj = FaultInjector(seed, oom_p=oom_p, fault_p=fault_p,
+                        spike_p=spike_p, spike_s=0.0005,
+                        shrink_pages=shrink, draft_p=0.5)
+    kw = dict(injector=inj, max_request_s=30.0)
+    if engine == "spec":
+        from repro.spec import SpecEngine
+        from repro.sched import SchedEngine
+        eng = SpecEngine(lm, params, spec="ngram", draft_k=4,
+                         n_slots=2, max_len=64, seed=0, page_size=8,
+                         decode_block=4, prefill_chunk=16,
+                         prefix_cache=False, **kw)
+    else:
+        eng = _sched(lm, params, **kw)
+    assert eng.resilient
+    ids, done = _drive(eng, prompts)
+    # every admitted request terminated with exactly one recorded outcome
+    for i in ids:
+        assert done[i].done and done[i].outcome in OUTCOMES, \
+            f"request {i} retired without an outcome"
+    # no page leak / double free: pool fully drained (null page excluded)
+    al = eng.alloc
+    assert sorted(al.free) == list(range(1, al.n_pages)), \
+        "allocator did not drain after chaos"
+    assert all(al.refs[p] == 0 for p in range(1, al.n_pages))
+    # survivors are token-identical to the fault-free run
+    for i, want in zip(ids, base_outs):
+        if done[i].outcome == "ok":
+            assert list(done[i].out_tokens) == want, \
+                f"chaos seed {seed} corrupted surviving request {i}"
+    return eng, [done[i].outcome for i in ids]
+
+
+if _HAS_HYPOTHESIS:
+    @settings(deadline=None, max_examples=6)
+    @given(st.integers(0, 50))
+    def test_chaos_invariants_under_random_fault_schedules(seed):
+        _chaos_invariants(seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_chaos_invariants_under_random_fault_schedules(seed):
+        _chaos_invariants(seed)
+
+
+def test_chaos_invariants_spec_engine_draft_mangling():
+    """Degenerate drafts + transient faults through SpecEngine: exact
+    verify/accept must reject the garbage and survivors stay identical
+    to the (non-speculative) fault-free streams."""
+    eng, outcomes = _chaos_invariants(2, engine="spec")
+    assert eng.injector.counts["draft"] > 0, "mangling never fired"
+
+
+def test_retries_exhausted_fails_requests_without_crashing():
+    """fault_p=1: every dispatch attempt faults, so every request must
+    burn its bounded retries and retire 'failed' — never hang or
+    propagate."""
+    lm, params, prompts, _ = _prompts_and_baseline()
+    inj = FaultInjector(0, fault_p=1.0)
+    eng = _sched(lm, params, injector=inj, max_retries=2)
+    ids, done = _drive(eng, prompts[:3])
+    assert all(done[i].outcome == "failed" for i in ids)
+    al = eng.alloc
+    assert sorted(al.free) == list(range(1, al.n_pages))
+    snap = eng.metrics.snapshot()["counters"]
+    assert snap['resil_requests_total{outcome="failed"}'] == 3
+    assert snap["resil_failed_total"] == 3
+
+
+def test_request_deadline_times_out_and_frees_pages():
+    lm, params, prompts, _ = _prompts_and_baseline()
+    eng = _sched(lm, params, max_request_s=0.0)
+    assert eng.resilient
+    ids, done = _drive(eng, prompts[:4])
+    assert all(done[i].outcome == "timed_out" for i in ids)
+    assert all(done[i].out_tokens == [] for i in ids)
+    al = eng.alloc
+    assert sorted(al.free) == list(range(1, al.n_pages))
+    snap = eng.metrics.snapshot()["counters"]
+    assert snap["resil_timeouts_total"] == 4
+
+
+def test_ladder_shed_rung_sheds_queue_with_retry_after():
+    """Pin the ladder at the shed rung: queued requests beyond the
+    policy's keep-set must retire 'shed' carrying a positive
+    retry-after hint, and the kept ones complete normally."""
+    lm, params, prompts, base_outs = _prompts_and_baseline()
+    eng = _sched(lm, params, ladder=True)
+    assert eng.resilient and eng.ladder is not None
+    eng.ladder.rung = 4                   # force shed (hysteresis is
+    eng.ladder.cool_ticks = 10**9         # unit-tested above)
+    ids, done = _drive(eng, prompts)
+    outcomes = [done[i].outcome for i in ids]
+    assert "shed" in outcomes and "ok" in outcomes
+    for i, want in zip(ids, base_outs):
+        if done[i].outcome == "shed":
+            assert done[i].retry_after_s > 0
+            assert done[i].out_tokens == []
+        else:
+            assert list(done[i].out_tokens) == want
+    al = eng.alloc
+    assert sorted(al.free) == list(range(1, al.n_pages))
+
+
+def test_ladder_idle_is_token_identical():
+    """A ladder at rung 0 (no pressure — the workload fits the slots,
+    so queue depth stays 0) must not perturb the streams."""
+    lm, params, prompts, base_outs = _prompts_and_baseline()
+    eng = _sched(lm, params, ladder=True)
+    ids, done = _drive(eng, prompts[:2])
+    assert [list(done[i].out_tokens) for i in ids] == base_outs[:2]
+    assert eng.ladder.rung == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore logging (satellite)
+
+
+def test_checkpoint_restore_counts_and_warns_on_corrupt_steps(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    m = _registry()
+    mgr = CheckpointManager(str(tmp_path), metrics=m)
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    mgr.save(1, params)
+    mgr.save(2, params)
+    # corrupt the newest step's shard: restore must warn (naming the
+    # step and the reason), count the failure, and fall back to step 1
+    shard = tmp_path / "step_000000002" / "shard_00000.npz"
+    shard.write_bytes(b"garbage")
+    with pytest.warns(UserWarning, match="step 2 failed to load"):
+        out = mgr.restore()
+    assert out["step"] == 1
+    assert mgr.load_failures == 1
+    assert m.snapshot()["counters"]["checkpoint_load_failures_total"] == 1
+    # explicit-step restore still raises instead of falling back
+    with pytest.raises(Exception):
+        mgr.restore(2)
+    assert mgr.load_failures == 2
